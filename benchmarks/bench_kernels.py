@@ -1,0 +1,54 @@
+"""Kernel micro-benchmarks: jnp reference path wall-clock on CPU plus the
+interpret-mode parity check. (Real Pallas timings need a TPU; the TPU-side
+performance statement is the roofline of the mask-matmul form — see
+EXPERIMENTS.md §Roofline FIM rows.)"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _time(f, *args, reps=5):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = f(*args)
+    try:
+        r.block_until_ready()
+    except AttributeError:
+        pass
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run() -> list[tuple[str, float, str]]:
+    import jax.numpy as jnp
+
+    from repro.kernels.cooccur.ref import cooccur_ref
+    from repro.kernels.histogram.ref import histogram_ref
+    from repro.kernels.nlist_intersect.ref import nlist_intersect_ref
+    import jax
+
+    rng = np.random.default_rng(0)
+    out = []
+
+    rows = jnp.asarray(rng.integers(-1, 512, size=(4096, 32)), jnp.int32)
+    w = jnp.ones(4096, jnp.int32)
+    f = jax.jit(lambda r, w: histogram_ref(r, w, n_bins=512))
+    out.append(("histogram_4096x32_b512", _time(f, rows, w), "ref/jnp"))
+
+    f = jax.jit(lambda r, w: cooccur_ref(r, w, n_items=256))
+    rows2 = jnp.asarray(rng.integers(-1, 256, size=(2048, 24)), jnp.int32)
+    out.append(("cooccur_2048x24_k256", _time(f, rows2, jnp.ones(2048, jnp.int32)), "ref/jnp"))
+
+    B, La, Ly = 512, 256, 256
+    a_pre = jnp.asarray(np.sort(rng.integers(0, 1 << 20, (B, La)), axis=1), jnp.int32)
+    a_post = a_pre + 5
+    y_pre = jnp.asarray(np.sort(rng.integers(0, 1 << 20, (B, Ly)), axis=1), jnp.int32)
+    y_post = y_pre - 3
+    y_cnt = jnp.ones((B, Ly), jnp.int32)
+    f = jax.jit(nlist_intersect_ref)
+    out.append(
+        (f"nlist_intersect_B{B}_{La}x{Ly}", _time(f, a_pre, a_post, y_pre, y_post, y_cnt), "ref/jnp")
+    )
+    return out

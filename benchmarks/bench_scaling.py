@@ -1,0 +1,73 @@
+"""Scalability (paper §4/§6: partition the DB, mine per block): per-shard
+work and memory vs number of MapReduce workers.
+
+Runs HPrepost on 1/2/4/8 fake devices (subprocess per world size) and
+reports: wall time, per-shard tree nodes (the reducer's memory), and the
+psum'd support correctness — the paper's "HPrepost memory << PrePost
+memory" claim is the per-shard tree column.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_WORKER = textwrap.dedent(
+    """
+    import os, sys, json, time
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+    import numpy as np, jax
+    from jax.sharding import AxisType
+    from repro.core.hprepost import HPrepostMiner, HPrepostConfig
+    from repro.core import encoding as enc
+    from repro.core.ppc import build_ppc
+    from repro.data.synth import load
+
+    D = int(sys.argv[1])
+    rows, n_items = load("kosarak", scale=0.03)
+    mesh = jax.make_mesh((D, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    miner = HPrepostMiner(mesh, config=HPrepostConfig(max_k=4))
+    min_count = max(1, int(0.008 * len(rows)))
+    res = miner.mine(rows, n_items, min_count)          # cold (compile)
+    t0 = time.time(); res = miner.mine(rows, n_items, min_count); warm = time.time() - t0
+
+    # per-shard tree size (reducer memory model)
+    fl = enc.build_flist(enc.item_support(rows, n_items), min_count)
+    ranked = enc.rank_encode(rows, fl)
+    shard_nodes = []
+    per = (len(ranked) + D - 1) // D
+    for d in range(D):
+        block = ranked[d * per : (d + 1) * per]
+        urows, w = enc.dedup_rows(block)
+        shard_nodes.append(build_ppc(urows, w).n_nodes if len(urows) else 0)
+    print(json.dumps({
+        "workers": D, "warm_s": warm, "n_itemsets": res.total_count,
+        "max_shard_nodes": max(shard_nodes), "total_nodes_single": build_ppc(
+            *enc.dedup_rows(ranked)).n_nodes,
+    }))
+    """
+)
+
+
+def run(out_path: str | None = None, worlds=(1, 2, 4, 8)) -> list[dict]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    recs = []
+    for d in worlds:
+        out = subprocess.run(
+            [sys.executable, "-c", _WORKER, str(d)],
+            env=env, capture_output=True, text=True, timeout=560,
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        rec = json.loads(out.stdout.strip().splitlines()[-1])
+        recs.append(rec)
+        print(
+            f"workers={d}: warm {rec['warm_s']:.2f}s | per-shard tree {rec['max_shard_nodes']} "
+            f"nodes (single-node: {rec['total_nodes_single']}) | n={rec['n_itemsets']}"
+        )
+    if out_path:
+        json.dump(recs, open(out_path, "w"), indent=1)
+    return recs

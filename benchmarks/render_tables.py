@@ -1,0 +1,54 @@
+"""Render the §Roofline tables from results/dryrun into EXPERIMENTS.md
+(replaces the <!-- ROOFLINE_TABLE --> / <!-- FIM_TABLE --> markers)."""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.roofline import load, table  # noqa: E402
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def fim_table(recs) -> str:
+    rows = [r for r in recs if r.get("arch", "").startswith("hprepost_")]
+    rows.sort(key=lambda r: (r["mesh"], r["arch"]))
+    out = [
+        "| stage | mesh | t_compute (s) | t_memory (s) | t_collective (s) | bottleneck |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch'].replace('hprepost_', '')} | {r['mesh']} | {r['t_compute']:.2e} "
+            f"| {r['t_memory']:.2e} | {r['t_collective']:.2e} | {r['bottleneck']} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    recs = load()
+    model_recs = [r for r in recs if not r.get("arch", "").startswith("hprepost_")]
+    roof = table(model_recs, mesh="pod16x16")
+    fim = fim_table(recs)
+    text = open(EXP).read()
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLE -->(.|\n)*?(?=\n### FIM)",
+        "<!-- ROOFLINE_TABLE -->\n" + roof + "\n",
+        text,
+        count=1,
+    ) if "<!-- ROOFLINE_TABLE -->" in text else text
+    text = re.sub(
+        r"<!-- FIM_TABLE -->(.|\n)*?(?=\nThe wave rows)",
+        "<!-- FIM_TABLE -->\n" + fim + "\n",
+        text,
+        count=1,
+    ) if "<!-- FIM_TABLE -->" in text else text
+    open(EXP, "w").write(text)
+    print("EXPERIMENTS.md tables updated")
+
+
+if __name__ == "__main__":
+    main()

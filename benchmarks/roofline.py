@@ -1,0 +1,57 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(results_dir: str = RESULTS) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def table(recs: list[dict], mesh: str = "pod16x16") -> str:
+    rows = [r for r in recs if r.get("mesh") == mesh and "skipped" not in r and "error" not in r]
+    rows.sort(key=lambda r: (r["arch"], r.get("shape", "")))
+    out = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) | bottleneck | "
+        "MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        dom = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        frac = r["t_compute"] / dom if dom else 0.0
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3e} | {r['t_memory']:.3e} "
+            f"| {r['t_collective']:.3e} | {r['bottleneck']} "
+            f"| {r.get('useful_flops_ratio', 0):.2f} | {frac:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def summary(recs: list[dict]) -> dict:
+    done = [r for r in recs if "skipped" not in r and "error" not in r]
+    return {
+        "cells": len(done),
+        "errors": sum(1 for r in recs if "error" in r),
+        "skips": sum(1 for r in recs if "skipped" in r),
+        "bottlenecks": {
+            b: sum(1 for r in done if r["bottleneck"] == b)
+            for b in ("compute", "memory", "collective")
+        },
+    }
+
+
+def main():
+    recs = load()
+    print(json.dumps(summary(recs), indent=1))
+    print(table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Benchmark runner — one section per paper table/figure.
+
+  paper_runtime_memory : Figs 3-6 (runtime) + Figs 7-10 (memory)
+  scaling              : §4 MapReduce block partitioning (workers sweep)
+  kernels              : per-kernel micro-latency (CPU ref path)
+  roofline             : dry-run aggregation (EXPERIMENTS.md §Roofline)
+
+Prints ``name,us_per_call,derived`` CSV lines per the harness contract.
+Use ``--quick`` for a reduced sweep, ``--skip-scaling`` in constrained CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-scaling", action="store_true")
+    args, _ = ap.parse_known_args()
+    os.makedirs(RESULTS, exist_ok=True)
+
+    print("name,us_per_call,derived")
+
+    # --- paper tables (runtime + memory vs min-sup, 4 datasets)
+    from benchmarks.bench_paper import run as paper_run
+
+    recs = paper_run(os.path.join(RESULTS, "paper_tables.json"), quick=args.quick)
+    for r in recs:
+        tag = f"{r['dataset']}_sup{r['min_sup']}"
+        print(f"fig3-6_runtime_hprepost_{tag},{r['hprepost_s']*1e6:.0f},n={r['n_itemsets']}")
+        print(f"fig3-6_runtime_prepost_{tag},{r['prepost_s']*1e6:.0f},")
+        print(f"fig3-6_runtime_fpgrowth_{tag},{r['fpgrowth_s']*1e6:.0f},")
+        print(f"fig7-10_memory_hprepost_{tag},0,{r['hprepost_bytes']}B")
+        print(f"fig7-10_memory_prepost_{tag},0,{r['prepost_bytes']}B")
+        print(f"fig7-10_memory_fpgrowth_{tag},0,{r['fpgrowth_bytes']}B")
+
+    # --- kernels
+    from benchmarks.bench_kernels import run as kernels_run
+
+    for name, us, note in kernels_run():
+        print(f"kernel_{name},{us:.0f},{note}")
+
+    # --- scaling (subprocesses with fake devices)
+    if not args.skip_scaling:
+        from benchmarks.bench_scaling import run as scaling_run
+
+        recs = scaling_run(os.path.join(RESULTS, "scaling.json"),
+                           worlds=(1, 2, 4) if args.quick else (1, 2, 4, 8))
+        for r in recs:
+            print(
+                f"scaling_workers{r['workers']},{r['warm_s']*1e6:.0f},"
+                f"shard_nodes={r['max_shard_nodes']}/single={r['total_nodes_single']}"
+            )
+
+    # --- roofline aggregation (requires results/dryrun from repro.launch.dryrun)
+    from benchmarks.roofline import load, summary
+
+    recs = load()
+    if recs:
+        s = summary(recs)
+        print(f"roofline_cells,{s['cells']},errors={s['errors']} skips={s['skips']}")
+        for r in recs:
+            if "skipped" in r or "error" in r:
+                continue
+            dom = max(r["t_compute"], r["t_memory"], r["t_collective"])
+            print(
+                f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},"
+                f"{dom*1e6:.1f},bottleneck={r['bottleneck']}"
+            )
+
+
+if __name__ == "__main__":
+    main()

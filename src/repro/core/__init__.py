@@ -1,0 +1,26 @@
+"""Core of the paper's contribution: N-list frequent-itemset mining.
+
+Public API:
+  - encoding: transaction padding, F-list, rank encoding
+  - ppc: sort-based PPC-tree (TPU-native construction)
+  - nlist: N-list intersection (vectorized subsume test)
+  - prepost: single-shard PrePost/PrePost+ miner
+  - hprepost: distributed MapReduce miner (shard_map)
+  - fpgrowth / apriori / oracle: comparators
+"""
+from repro.core.encoding import PAD, FList, build_flist, item_support, pad_transactions, rank_encode
+from repro.core.ppc import PPCTree, build_ppc
+from repro.core.prepost import MineResult, mine_prepost
+
+__all__ = [
+    "PAD",
+    "FList",
+    "build_flist",
+    "item_support",
+    "pad_transactions",
+    "rank_encode",
+    "PPCTree",
+    "build_ppc",
+    "MineResult",
+    "mine_prepost",
+]

@@ -1,0 +1,337 @@
+"""HPrepost: the paper's MapReduce miner as sharded JAX (the contribution).
+
+The Hadoop pipeline maps onto a ``(data, model)`` device mesh:
+
+  Job 1 (word count)      -> per-shard histogram kernel + ``psum`` over `data`
+  Job 2 map (F-list sort) -> per-shard ``rank_encode_jnp`` (no communication)
+  Job 2 reduce (PPC-tree) -> per-shard sort-based ``build_ppc_jnp``: every
+                             data shard owns the PPC-tree/N-lists of its block,
+                             exactly one Hadoop reducer's state
+  F2 scan                 -> per-shard co-occurrence matmul + ``psum``
+  k>2 mining waves        -> batched N-list intersections; *candidate* axis
+                             sharded over `model` (the PFP/MRPrepost "group
+                             partitioning"), per-candidate supports ``psum``-ed
+                             over `data` (supports are additive across DB
+                             blocks); the parent-state gather between waves is
+                             the MapReduce shuffle, expressed as a sharded
+                             ``take`` that XLA lowers to collectives.
+
+Mining state per (data-shard, candidate): the merged N-list counts aligned
+with the candidate's base-item code slots — static ``(D, C, W)`` buffers, so
+every wave is one jitted, fully sharded call. All jitted functions are built
+once per miner (static shapes bucketed to powers of two) so repeated mines
+hit the jit cache.
+
+The host drives the level loop (as the Hadoop job driver does); device code
+never materializes the global database or any global tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import encoding as enc
+from repro.core.ppc import build_ppc_jnp
+from repro.core.prepost import MineResult
+from repro.kernels.cooccur.ops import cooccurrence_matrix
+from repro.kernels.histogram.ops import item_histogram
+from repro.kernels.nlist_intersect.ops import nlist_intersect
+
+INF32 = np.iinfo(np.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class HPrepostConfig:
+    max_k: int | None = None
+    nlist_width: int | None = None  # static W; None = auto (next pow2 of max)
+    candidate_unit: int = 256  # candidate buffers: pow2 multiples of this
+    partition_candidates: bool = True  # mode B (PFP groups over `model`)
+    locality_dispatch: bool = True  # children placed on their parent's shard:
+    # the inter-wave shuffle becomes a shard-local gather (zero collectives),
+    # at the cost of per-shard padding under skew (§Perf FIM iteration)
+    backend: str = "auto"  # kernel dispatch: auto | pallas | jnp
+    max_f1: int = 4096  # guard on |F-list| (F2 matrix is K^2)
+    max_itemsets: int = 2_000_000
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class HPrepostMiner:
+    """Distributed N-list miner bound to a mesh.
+
+    ``data_axis`` may name multiple mesh axes (e.g. ``("pod", "data")``) —
+    DB blocks shard over all of them; ``model_axis`` shards the candidate
+    space (mode B). ``model_axis=None`` degrades to pure mode A.
+    """
+
+    def __init__(
+        self,
+        mesh: jax.sharding.Mesh,
+        data_axis: str | tuple[str, ...] = "data",
+        model_axis: str | None = "model",
+        config: HPrepostConfig = HPrepostConfig(),
+    ):
+        self.mesh = mesh
+        self.data_axis = (data_axis,) if isinstance(data_axis, str) else tuple(data_axis)
+        self.model_axis = model_axis
+        self.cfg = config
+        self.D = int(np.prod([mesh.shape[a] for a in self.data_axis]))
+        self.M = int(mesh.shape[model_axis]) if model_axis else 1
+        self._cand_spec = (
+            P(self.model_axis)
+            if (self.cfg.partition_candidates and self.model_axis)
+            else P()
+        )
+        self._build_jits()
+
+    @property
+    def _da(self):
+        return self.data_axis if len(self.data_axis) > 1 else self.data_axis[0]
+
+    def _shard(self, arr: np.ndarray, spec: P) -> jax.Array:
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
+
+    # ------------------------------------------------------------------ jits
+    def _build_jits(self):
+        cfg = self.cfg
+        mesh = self.mesh
+        da = self._da
+        cand_spec = self._cand_spec
+
+        @functools.partial(jax.jit, static_argnames=("n_items",))
+        def job1(rows, *, n_items):
+            def body(block):
+                h = item_histogram(block, n_bins=n_items, backend=cfg.backend)
+                return jax.lax.psum(h, da)
+
+            return jax.shard_map(body, mesh=mesh, in_specs=P(da, None), out_specs=P())(rows)
+
+        @functools.partial(jax.jit, static_argnames=("max_nodes", "k", "n_items"))
+        def job2(rows, lut, *, max_nodes, k, n_items):
+            def body(block, lut):
+                ranked = enc.rank_encode_jnp(block, lut, n_items)
+                w = jnp.ones(block.shape[0], jnp.int32)
+                item, count, pre, post, valid = build_ppc_jnp(ranked, w, max_nodes, n_items=k)
+                lens = jax.ops.segment_sum(
+                    jnp.where(valid, 1, 0), jnp.where(valid, item, k), num_segments=k + 1
+                )[:k]
+                lens = jax.lax.pmax(lens, da)
+                return ranked[None], item[None], count[None], pre[None], post[None], lens
+
+            return jax.shard_map(
+                functools.partial(body, lut=lut),
+                mesh=mesh,
+                in_specs=P(da, None),
+                out_specs=(P(da, None), P(da), P(da), P(da), P(da), P()),
+            )(rows)
+
+        @functools.partial(jax.jit, static_argnames=("k", "width"))
+        def pack(item, count, pre, post, *, k, width):
+            def body(item, count, pre, post):
+                item, count, pre, post = item[0], count[0], pre[0], post[0]
+                n = item.shape[0]
+                # lexsort avoids int32 overflow of a combined item*n+pre key
+                order = jnp.lexsort((jnp.minimum(pre, n), item))
+                sitem = item[order]
+                boundaries = jnp.searchsorted(sitem, jnp.arange(k + 1))
+                slot = jnp.arange(n) - boundaries[jnp.clip(sitem, 0, k)]
+                valid = (sitem >= 0) & (slot < width)
+                flat = jnp.where(valid, jnp.clip(sitem, 0, k - 1) * width + slot, k * width)
+                packed = jnp.full((k * width + 1, 3), jnp.array([INF32, -1, 0]), jnp.int32)
+                vals = jnp.stack(
+                    [pre[order].astype(jnp.int32), post[order].astype(jnp.int32),
+                     count[order].astype(jnp.int32)], axis=1)
+                vals = jnp.where(valid[:, None], vals, jnp.array([INF32, -1, 0], jnp.int32))
+                packed = packed.at[flat].set(vals, mode="drop")
+                return packed[: k * width].reshape(1, k, width, 3)
+
+            return jax.shard_map(
+                body, mesh=mesh, in_specs=(P(da),) * 4,
+                out_specs=P(da, None, None, None),
+            )(item, count, pre, post)
+
+        @functools.partial(jax.jit, static_argnames=("k",))
+        def jobf2(rows, *, k):
+            def body(block):
+                C = cooccurrence_matrix(block[0], n_items=k, backend=cfg.backend)
+                return jax.lax.psum(C, da)
+
+            return jax.shard_map(body, mesh=mesh, in_specs=P(da, None), out_specs=P())(rows)
+
+        @jax.jit
+        def wave(packed, prev_state, parent_idx, base_idx, q_idx):
+            # MapReduce shuffle: route parent rows to their candidates
+            # (paper-faithful MRPrepost-style partitioning — the take crosses
+            # shards and XLA emits the shuffle collectives)
+            state = jnp.take(prev_state, parent_idx, axis=1)
+            state = jax.lax.with_sharding_constraint(
+                state, NamedSharding(mesh, P(da, *cand_spec, None))
+            )
+
+            def body(packed, state, base_idx, q_idx):
+                packed, state = packed[0], state[0]  # (K, W, 3), (C_l, W)
+                a = packed[q_idx]
+                y = packed[base_idx]
+                new = nlist_intersect(
+                    a[:, :, 0], a[:, :, 1], y[:, :, 0], y[:, :, 1], state, backend=cfg.backend
+                )
+                sup = jax.lax.psum(new.sum(axis=1), da)
+                return new[None], sup
+
+            return jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(P(da, None, None, None), P(da, *cand_spec, None), cand_spec, cand_spec),
+                out_specs=(P(da, *cand_spec, None), cand_spec),
+            )(packed, state, base_idx, q_idx)
+
+        @jax.jit
+        def wave_local(packed, prev_state, parent_local, base_idx, q_idx):
+            # locality-aware dispatch (beyond-paper, §Perf FIM): children sit
+            # on their parent's shard, so the parent gather is shard-local —
+            # the shuffle disappears; only the support psum remains.
+            def body(packed, prev, pidx, bidx, qidx):
+                packed, prev = packed[0], prev[0]  # (K, W, 3), (Cprev_l, W)
+                state = prev[pidx]  # local rows only
+                a = packed[qidx]
+                y = packed[bidx]
+                new = nlist_intersect(
+                    a[:, :, 0], a[:, :, 1], y[:, :, 0], y[:, :, 1], state, backend=cfg.backend
+                )
+                sup = jax.lax.psum(new.sum(axis=1), da)
+                return new[None], sup
+
+            return jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(
+                    P(da, None, None, None),
+                    P(da, *cand_spec, None),
+                    cand_spec,
+                    cand_spec,
+                    cand_spec,
+                ),
+                out_specs=(P(da, *cand_spec, None), cand_spec),
+            )(packed, prev_state, parent_local, base_idx, q_idx)
+
+        self._job1, self._job2, self._pack, self._jobf2 = job1, job2, pack, jobf2
+        self._wave, self._wave_local = wave, wave_local
+
+    # ---------------------------------------------------------------- driver
+    def mine(self, rows: np.ndarray, n_items: int, min_count: int) -> MineResult:
+        cfg = self.cfg
+        R0, L = rows.shape
+        Rp = (R0 + self.D - 1) // self.D * self.D
+        rows_p = np.full((Rp, L), enc.PAD, np.int32)
+        rows_p[:R0] = rows
+        rows_sharded = self._shard(rows_p, P(self._da, None))
+
+        supports = np.asarray(jax.device_get(self._job1(rows_sharded, n_items=n_items)))
+        fl = enc.build_flist(supports, min_count)
+        K = fl.k
+        if K > cfg.max_f1:
+            raise ValueError(f"|F1|={K} exceeds max_f1={cfg.max_f1}; raise min_count or max_f1")
+
+        itemsets: dict[tuple[int, ...], int] = {}
+        for r in range(K):
+            itemsets[(int(fl.items[r]),)] = int(fl.supports[r])
+        if K == 0 or cfg.max_k == 1:
+            return MineResult(itemsets, fl.items, len(itemsets), len(itemsets), 0)
+
+        max_nodes = (Rp // self.D) * L
+        ranked, item, count, pre, post, lens = self._job2(
+            rows_sharded, jnp.asarray(fl.rank_lut()), max_nodes=max_nodes, k=K, n_items=n_items
+        )
+        w_needed = int(np.asarray(jax.device_get(lens)).max(initial=1))
+        W = cfg.nlist_width or _pow2(max(w_needed, 8))
+        packed = self._pack(item, count, pre, post, k=K, width=W)
+
+        C = np.asarray(jax.device_get(self._jobf2(ranked, k=K))) if K > 1 else np.zeros((K, K), np.int64)
+        C = np.triu(C, 1)
+        pair_ok = (C + C.T) >= min_count
+
+        peak = int(packed.size * 4 // max(self.D, 1))
+
+        # level 2: parents are singletons; prev_state = the node counts
+        # (replicated over `model`, so the bootstrap take is collective-free)
+        prev_state = packed[:, :, :, 2]
+        qs, ps = np.nonzero(C >= min_count)
+        cands = [((int(q), int(p)), int(p), int(q)) for q, p in zip(qs, ps)]
+        level = 2
+        unit = cfg.candidate_unit
+        Mb = max(self.M, 1) if (cfg.partition_candidates and self.model_axis) else 1
+        use_locality = cfg.locality_dispatch
+        slots_per_shard = 0  # of the *previous* wave (for locality bucketing)
+
+        while cands and (cfg.max_k is None or level <= cfg.max_k) and len(itemsets) < cfg.max_itemsets:
+            if level == 2 or not use_locality:
+                Cn = len(cands)
+                Cs = unit * _pow2((Cn + unit * Mb - 1) // (unit * Mb))
+                Cpad = Cs * Mb
+                slot_of = list(range(Cn))  # candidate i -> global slot i
+                parent_arr = np.zeros(Cpad, np.int32)
+                base_idx = np.zeros(Cpad, np.int32)
+                q_idx = np.zeros(Cpad, np.int32)
+                for i, (ranks, par, q) in enumerate(cands):
+                    parent_arr[i] = par
+                    base_idx[i] = ranks[1]
+                    q_idx[i] = q
+                wave_fn = self._wave
+            else:
+                # locality-aware: bucket children onto their parent's shard
+                buckets: list[list[int]] = [[] for _ in range(Mb)]
+                for i, (_, pslot, _) in enumerate(cands):
+                    buckets[min(pslot // slots_per_shard, Mb - 1)].append(i)
+                worst = max(len(b) for b in buckets)
+                Cs = unit * _pow2((worst + unit - 1) // unit)
+                Cpad = Cs * Mb
+                parent_arr = np.zeros(Cpad, np.int32)
+                base_idx = np.zeros(Cpad, np.int32)
+                q_idx = np.zeros(Cpad, np.int32)
+                slot_of = [0] * len(cands)
+                for s, bucket in enumerate(buckets):
+                    for j, i in enumerate(bucket):
+                        ranks, pslot, q = cands[i]
+                        slot = s * Cs + j
+                        slot_of[i] = slot
+                        parent_arr[slot] = pslot % slots_per_shard  # local row
+                        base_idx[slot] = ranks[1]
+                        q_idx[slot] = q
+                wave_fn = self._wave_local
+
+            new_state, sups = wave_fn(
+                packed,
+                prev_state,
+                self._shard(parent_arr, self._cand_spec),
+                self._shard(base_idx, self._cand_spec),
+                self._shard(q_idx, self._cand_spec),
+            )
+            sups = np.asarray(jax.device_get(sups))
+            peak = max(peak, int(new_state.size * 4 // max(self.D * Mb, 1)))
+
+            next_cands: list[tuple[tuple[int, ...], int, int]] = []
+            for i, (ranks, _, q) in enumerate(cands):
+                sup = int(sups[slot_of[i]])
+                if sup < min_count:
+                    continue
+                ids = tuple(sorted(int(fl.items[r]) for r in ranks))
+                itemsets[ids] = sup
+                base = ranks[0]
+                for q2 in range(base - 1, -1, -1):
+                    if all(pair_ok[q2, p] for p in ranks):
+                        next_cands.append(((q2,) + ranks, slot_of[i], q2))
+            prev_state = new_state
+            cands = next_cands
+            slots_per_shard = Cpad // Mb
+            level += 1
+
+        return MineResult(itemsets, fl.items, len(itemsets), len(itemsets), peak)

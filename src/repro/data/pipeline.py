@@ -1,0 +1,62 @@
+"""Sharded input pipeline: host batching, prefetch, straggler-aware skip.
+
+``Prefetcher`` runs the (host) batch generator on a thread and keeps a
+bounded queue of device-put batches — compute/host-IO overlap. If the
+``StragglerMonitor`` flags a step, ``skip_slow`` drops the queue head
+(redistribution hook: on a real cluster the slow shard's range is handed
+to a healthy host; here the skip policy + bookkeeping are what is tested).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import numpy as np
+
+
+class Prefetcher:
+    def __init__(self, gen, depth: int = 2, sharding=None):
+        self._gen = gen
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._sharding = sharding
+        self._stop = False
+        self._skipped = 0
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        for item in self._gen:
+            if self._stop:
+                return
+            if self._sharding is not None:
+                item = jax.tree.map(
+                    lambda x, s=self._sharding: jax.device_put(x, s.get(None) if isinstance(s, dict) else s),
+                    item,
+                )
+            self._q.put(item)
+
+    def next(self):
+        return self._q.get()
+
+    def skip_slow(self, n: int = 1):
+        """Straggler mitigation: drop ``n`` queued batches (they would have
+        been produced by the slow shard) and account for them."""
+        for _ in range(n):
+            try:
+                self._q.get_nowait()
+                self._skipped += 1
+            except queue.Empty:
+                break
+
+    @property
+    def skipped(self) -> int:
+        return self._skipped
+
+    def close(self):
+        self._stop = True
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

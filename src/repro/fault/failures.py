@@ -1,0 +1,82 @@
+"""Fault tolerance: failure injection, restart policy, straggler monitor.
+
+On a real cluster the runtime signals (preemption notice, ICI link error,
+host heartbeat loss) arrive from the platform; here they are modeled so the
+*recovery logic* — which is what this framework owns — is real and tested:
+
+  - ``FailureInjector``: deterministic or probabilistic step failures
+    (raises ``SimulatedFailure`` mid-loop).
+  - ``run_with_restarts``: supervisor that restarts the training loop from
+    the latest checkpoint, with bounded retries — the Hadoop-style task
+    re-execution the paper gets from MapReduce, at trainer granularity.
+  - ``StragglerMonitor``: per-step wall-time EWMA; steps slower than
+    ``threshold ×`` the EWMA are flagged, and the data loader can be told
+    to skip/redistribute the slow shard (mitigation hook).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    fail_at_steps: tuple = ()  # deterministic failures (once each)
+    fail_prob: float = 0.0  # plus i.i.d. failures
+    seed: int = 0
+
+    def __post_init__(self):
+        self._fired: set[int] = set()
+        import random
+
+        self._rng = random.Random(self.seed)
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+        if self.fail_prob and self._rng.random() < self.fail_prob:
+            raise SimulatedFailure(f"random failure at step {step}")
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 3.0, ewma: float = 0.9):
+        self.threshold = threshold
+        self.ewma_coef = ewma
+        self.mean: float | None = None
+        self.flagged: list[int] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        if self.mean is None:
+            self.mean = dt
+            return False
+        is_straggler = dt > self.threshold * self.mean
+        if is_straggler:
+            self.flagged.append(step)
+        else:  # stragglers don't contaminate the baseline
+            self.mean = self.ewma_coef * self.mean + (1 - self.ewma_coef) * dt
+        return is_straggler
+
+
+def run_with_restarts(
+    run: Callable[[int], int],
+    latest_step: Callable[[], int | None],
+    max_restarts: int = 5,
+) -> int:
+    """Supervisor: call ``run(start_step)``; on failure, resume from the
+    latest checkpoint. Returns the final step reached."""
+    restarts = 0
+    while True:
+        start = (latest_step() or -1) + 1
+        try:
+            return run(start)
+        except SimulatedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise

@@ -1,0 +1,3 @@
+from repro.kernels.cooccur.ops import cooccurrence_matrix
+
+__all__ = ["cooccurrence_matrix"]

@@ -1,0 +1,29 @@
+"""Public op: cooccurrence_matrix — Pallas on TPU, jnp elsewhere.
+
+Rows are processed in < 2^24-weight chunks so fp32 accumulation stays exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cooccur.kernel import cooccur_pallas
+from repro.kernels.cooccur.ref import cooccur_ref
+
+
+def cooccurrence_matrix(
+    rows: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    n_items: int,
+    backend: str = "auto",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    if weights is None:
+        weights = jnp.ones(rows.shape[0], jnp.int32)
+    use_pallas = backend == "pallas" or (
+        backend == "auto" and jax.default_backend() == "tpu"
+    )
+    if use_pallas:
+        return cooccur_pallas(rows, weights, n_items=n_items, interpret=interpret)
+    return cooccur_ref(rows, weights, n_items=n_items)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the co-occurrence kernel."""
+import jax.numpy as jnp
+
+
+def cooccur_ref(rows: jnp.ndarray, weights: jnp.ndarray, *, n_items: int) -> jnp.ndarray:
+    X = (rows[:, :, None] == jnp.arange(n_items)[None, None, :]).astype(jnp.float32).sum(axis=1)
+    C = (X * weights[:, None].astype(jnp.float32)).T @ X
+    return C.astype(jnp.int32)

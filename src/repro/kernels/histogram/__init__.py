@@ -1,0 +1,3 @@
+from repro.kernels.histogram.ops import item_histogram
+
+__all__ = ["item_histogram"]

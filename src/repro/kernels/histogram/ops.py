@@ -1,0 +1,33 @@
+"""Public op: item_histogram — dispatches Pallas on TPU, jnp elsewhere."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.histogram.kernel import histogram_pallas
+from repro.kernels.histogram.ref import histogram_ref
+
+
+def item_histogram(
+    rows: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    n_bins: int,
+    backend: str = "auto",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Weighted count of transactions containing each item id in [0, n_bins)."""
+    if weights is None:
+        weights = jnp.ones(rows.shape[0], jnp.int32)
+    use_pallas = backend == "pallas" or (
+        backend == "auto" and jax.default_backend() == "tpu"
+    )
+    if use_pallas and n_bins <= 65536:
+        return histogram_pallas(rows, weights, n_bins=n_bins, interpret=interpret)
+    if n_bins > 8192:
+        # large-universe path: scatter-add (one-hot tiles would be O(R·L·K))
+        flat = rows.reshape(-1)
+        w = jnp.broadcast_to(weights[:, None].astype(jnp.int32), rows.shape).reshape(-1)
+        w = jnp.where(flat >= 0, w, 0)
+        return jnp.zeros(n_bins, jnp.int32).at[jnp.clip(flat, 0, n_bins - 1)].add(w)
+    return histogram_ref(rows, weights, n_bins=n_bins)

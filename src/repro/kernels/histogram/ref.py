@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the histogram kernel."""
+import jax.numpy as jnp
+
+
+def histogram_ref(rows: jnp.ndarray, weights: jnp.ndarray, *, n_bins: int) -> jnp.ndarray:
+    onehot = (rows[:, :, None] == jnp.arange(n_bins)[None, None, :]).astype(jnp.int32)
+    return (onehot.sum(axis=1) * weights[:, None].astype(jnp.int32)).sum(axis=0)

@@ -1,0 +1,3 @@
+from repro.kernels.nlist_intersect.ops import nlist_intersect
+
+__all__ = ["nlist_intersect"]

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: batched N-list intersection (the paper's Example 2).
+
+For a batch of candidate itemsets, merges the candidate's N-list ``Y``
+(codes of its base item with current counts) into the extension item's
+N-list ``A``: ``out[b, i] = Σ_j y_cnt[b, j] · [a_pre[b, i] < y_pre[b, j]]
+· [a_post[b, i] > y_post[b, j]]``.
+
+Hardware adaptation (GPU/CPU -> TPU): the paper's linear merge — and even
+the searchsorted form used on host — is a gather/branch pattern TPUs
+execute poorly. Because each ``y`` has at most one ancestor in ``A``
+(antichain property, see nlist.py), the merge is *equivalent* to a dense
+subsume-mask contraction, which is a matmul: build the ``(La, Ly)`` boolean
+mask in VMEM with two broadcast compares and contract against ``y_cnt`` on
+the MXU. O(La·Ly) arithmetic beats O(Ly·log La) gathers on a systolic
+array by a wide margin at N-list sizes (≤ few thousand codes).
+
+Grid: (batch, La_blocks, Ly_blocks); the (b, La) output tile accumulates
+over Ly blocks. Counts are fp32 in-kernel (exact below 2^24 — itemset
+supports are bounded by the shard's row count, far below that).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _intersect_kernel(a_pre_ref, a_post_ref, y_pre_ref, y_post_ref, y_cnt_ref, out_ref):
+    lyb = pl.program_id(2)
+
+    @pl.when(lyb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a_pre = a_pre_ref[...]  # (1, la)
+    a_post = a_post_ref[...]  # (1, la)
+    y_pre = y_pre_ref[...]  # (1, ly)
+    y_post = y_post_ref[...]  # (1, ly)
+    y_cnt = y_cnt_ref[...].astype(jnp.float32)  # (1, ly)
+
+    # subsume mask (la, ly): A[i] is an ancestor of Y[j]
+    mask = (a_pre[0, :, None] < y_pre[0, None, :]) & (a_post[0, :, None] > y_post[0, None, :])
+    out_ref[...] += jax.lax.dot_general(
+        mask.astype(jnp.float32),
+        y_cnt[0, :, None],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[None, :, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("la_block", "ly_block", "interpret"))
+def nlist_intersect_pallas(
+    a_pre: jnp.ndarray,
+    a_post: jnp.ndarray,
+    y_pre: jnp.ndarray,
+    y_post: jnp.ndarray,
+    y_cnt: jnp.ndarray,
+    *,
+    la_block: int = 512,
+    ly_block: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """All inputs (B, La) / (B, Ly) int32; returns merged counts (B, La) int32.
+
+    Padding convention (nlist.pad_nlist): pre = INT32_MAX, post = -1, cnt = 0.
+    Padded A slots never pass ``a_pre < y_pre``; padded Y slots carry zero
+    count — no extra masks needed.
+    """
+    B, La = a_pre.shape
+    _, Ly = y_pre.shape
+    lab = min(la_block, La)
+    lyb = min(ly_block, Ly)
+    Lap = (La + lab - 1) // lab * lab
+    Lyp = (Ly + lyb - 1) // lyb * lyb
+    pad_a = ((0, 0), (0, Lap - La))
+    pad_y = ((0, 0), (0, Lyp - Ly))
+    a_pre = jnp.pad(a_pre, pad_a, constant_values=jnp.iinfo(jnp.int32).max)
+    a_post = jnp.pad(a_post, pad_a, constant_values=-1)
+    y_pre = jnp.pad(y_pre, pad_y, constant_values=jnp.iinfo(jnp.int32).max)
+    y_post = jnp.pad(y_post, pad_y, constant_values=-1)
+    y_cnt = jnp.pad(y_cnt, pad_y)
+
+    out = pl.pallas_call(
+        _intersect_kernel,
+        grid=(B, Lap // lab, Lyp // lyb),
+        in_specs=[
+            pl.BlockSpec((1, lab), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, lab), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, lyb), lambda b, i, j: (b, j)),
+            pl.BlockSpec((1, lyb), lambda b, i, j: (b, j)),
+            pl.BlockSpec((1, lyb), lambda b, i, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, lab), lambda b, i, j: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, Lap), jnp.float32),
+        interpret=interpret,
+    )(a_pre, a_post, y_pre, y_post, y_cnt)
+    return out[:, :La].astype(jnp.int32)

@@ -1,0 +1,29 @@
+"""Public op: nlist_intersect — Pallas (mask-matmul) on TPU, searchsorted jnp
+elsewhere. Both return merged counts aligned with A's code slots."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.nlist_intersect.kernel import nlist_intersect_pallas
+from repro.kernels.nlist_intersect.ref import nlist_intersect_ref
+
+
+def nlist_intersect(
+    a_pre: jnp.ndarray,
+    a_post: jnp.ndarray,
+    y_pre: jnp.ndarray,
+    y_post: jnp.ndarray,
+    y_cnt: jnp.ndarray,
+    *,
+    backend: str = "auto",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    use_pallas = backend == "pallas" or (
+        backend == "auto" and jax.default_backend() == "tpu"
+    )
+    if use_pallas:
+        return nlist_intersect_pallas(
+            a_pre, a_post, y_pre, y_post, y_cnt, interpret=interpret
+        )
+    return nlist_intersect_ref(a_pre, a_post, y_pre, y_post, y_cnt)

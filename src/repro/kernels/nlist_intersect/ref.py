@@ -1,0 +1,8 @@
+"""Pure-jnp oracle: batched searchsorted-based N-list intersection."""
+import jax.numpy as jnp
+
+from repro.core.nlist import batched_intersect_jnp
+
+
+def nlist_intersect_ref(a_pre, a_post, y_pre, y_post, y_cnt) -> jnp.ndarray:
+    return batched_intersect_jnp(a_pre, a_post, y_pre, y_post, y_cnt).astype(jnp.int32)

@@ -1,0 +1,284 @@
+"""Loop-aware HLO cost model (XLA's cost_analysis counts while bodies once).
+
+Parses post-optimization HLO text into computations, builds the call graph
+(fusion ``calls=``, ``while`` body/condition with ``known_trip_count``,
+``to_apply``), and rolls up per-computation costs with call multipliers:
+
+  flops      — 2·M·N·K per ``dot``/``convolution`` (resolving operand shapes
+               through a per-computation symbol table) + 1 flop/element for
+               elementwise ops
+  hbm bytes  — Σ (operand + result bytes) of memory-touching top-level ops
+               in non-fused computations (post-fusion, operands/results are
+               materialized buffers — the standard traffic model; tuple/gte/
+               bitcast/parameter plumbing is free)
+  collective — payload bytes per collective op type
+
+Validated against analytically-known workloads in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OPCODE_RE = re.compile(r"([a-z][a-z0-9\-]*)\(")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)')
+_CALLEE_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+# ops that don't touch memory (plumbing) — excluded from the byte model.
+# "copy" is excluded deliberately: the CPU-backend scheduled HLO copies
+# while-loop carries (residual stacks) every iteration, but XLA:TPU aliases
+# loop carries in place — counting them would charge TBs of phantom traffic
+# to every scanned-layer model (validated in tests/test_roofline.py).
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+    "after-all", "add-dependency", "while", "conditional", "call", "custom-call",
+    "partition-id", "replica-id", "domain", "opt-barrier", "copy",
+}
+# elementwise-ish opcodes: 1 flop per output element
+_EW_FLOPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "exponential",
+    "log", "tanh", "rsqrt", "sqrt", "power", "select", "compare", "and", "or",
+    "negate", "abs", "floor", "sign", "convert", "exponential-minus-one", "logistic",
+}
+
+
+def _size_of(shapes: list[tuple[str, str]]) -> tuple[int, int]:
+    elems = byts = 0
+    for dt, dims in shapes:
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_payload: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    calls: list = dataclasses.field(default_factory=list)  # (callee, multiplier)
+    fused: bool = False
+    has_slice: bool = False  # dynamic-slice/gather in body
+    has_dus: bool = False  # dynamic-update-slice/scatter in body
+
+
+def parse(hlo: str) -> tuple[dict[str, CompCost], str | None]:
+    comps: dict[str, CompCost] = {}
+    name = None
+    entry = None
+    symbols: dict[str, list[tuple[str, str]]] = {}  # %op -> result shapes
+
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if line.endswith("{") and ") -> " in line and ("%" in line.split("(")[0] or line.startswith("ENTRY")):
+            header = line.split("(")[0].strip()
+            name = header.replace("ENTRY", "").strip().lstrip("%")
+            comps[name] = CompCost(fused="fused" in name or "wrapped" in name)
+            if raw.startswith("ENTRY"):
+                entry = name
+            symbols = {}
+            continue
+        if name is None or " = " not in line:
+            continue
+        lhs, rhs = line.split(" = ", 1)
+        lhs = lhs.strip().lstrip("%")
+        cc = comps[name]
+
+        # strip metadata/backend_config before shape-scanning operands
+        core = rhs.split(", metadata=")[0]
+        # result shapes = shapes before the opcode's '('
+        op_m = _OPCODE_RE.search(core)
+        opcode = op_m.group(1) if op_m else ""
+        res_text = core[: op_m.start()] if op_m else core
+        res_shapes = _SHAPE_RE.findall(res_text)
+        symbols[lhs] = res_shapes
+
+        # ---- call graph
+        if opcode == "while":
+            trip = 1
+            tm = _TRIP_RE.search(rhs)
+            if tm:
+                trip = int(tm.group(1))
+            body = _CALLEE_RE.search(core)
+            cond = _COND_RE.search(core)
+            if body:
+                cc.calls.append((body.group(1), trip))
+            if cond:
+                cc.calls.append((cond.group(1), trip + 1))
+            continue
+        if opcode in ("fusion", "call", "conditional", "sort", "reduce", "scatter",
+                      "reduce-window", "map", "reduce-scatter", "all-reduce"):
+            for callee in _CALLEE_RE.findall(core):
+                cc.calls.append((callee, 1))
+            for callee in re.findall(
+                r"(?:true_computation|false_computation)=%?([\w\.\-]+)", core
+            ):
+                cc.calls.append((callee, 1))
+
+        # ---- operand shapes via symbol table
+        args_m = re.search(rf"{re.escape(opcode)}\(([^)]*)\)", core) if opcode else None
+        operand_shapes: list[tuple[str, str]] = []
+        if args_m:
+            for ref in re.findall(r"%([\w\.\-]+)", args_m.group(1)):
+                operand_shapes += symbols.get(ref, [])
+            operand_shapes += _SHAPE_RE.findall(args_m.group(1))  # inline-typed operands
+
+        # ---- flops
+        if opcode in ("dot", "convolution"):
+            res_elems, _ = _size_of(res_shapes)
+            k = 1
+            cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", core)
+            if cm:
+                # lhs operand = first %ref in the dot args
+                refs = re.findall(r"%([\w\.\-]+)", args_m.group(1)) if args_m else []
+                lhs_shape = symbols.get(refs[0], [("", "")])[0] if refs else ("", "")
+                dims = [int(x) for x in lhs_shape[1].split(",") if x]
+                for ci in cm.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+            elif opcode == "convolution":
+                km = re.search(r"window=\{size=([0-9x]+)", core)
+                if km:
+                    for d in km.group(1).split("x"):
+                        k *= int(d)
+            cc.flops += 2.0 * res_elems * k
+        elif opcode in _EW_FLOPS:
+            res_elems, _ = _size_of(res_shapes)
+            cc.flops += res_elems
+
+        # ---- collectives
+        base_op = opcode.replace("-start", "")
+        if base_op in _COLLECTIVES and not opcode.endswith("-done"):
+            _, b = _size_of(res_shapes)
+            cc.coll_payload[base_op] += b
+
+        # record slice/scatter presence (drives fusion traffic modeling)
+        if opcode in ("dynamic-slice", "gather"):
+            cc.has_slice = True
+        if opcode in ("dynamic-update-slice", "scatter"):
+            cc.has_dus = True
+
+        # ---- HBM traffic (top-level ops of non-fused computations)
+        if not cc.fused and opcode and opcode not in _FREE_OPS:
+            _, rb = _size_of(res_shapes)
+            per_op = [_size_of([s])[1] for s in operand_shapes]
+            ob = sum(per_op)
+            if opcode == "fusion":
+                callee = _CALLEE_RE.search(core)
+                sub = comps.get(callee.group(1)) if callee else None
+                if sub is not None and (sub.has_dus or sub.has_slice) and per_op:
+                    big = max(per_op)
+                    if sub.has_dus:
+                        # in-place update: traffic ≈ read+write of the update
+                        cc.bytes += 2 * (ob - big)
+                    else:
+                        # slice/gather: read ≈ result, not the whole operand
+                        cc.bytes += rb + (ob - big) + rb
+                    continue
+            if opcode in ("dynamic-slice", "gather"):
+                cc.bytes += 2 * rb + (ob - max(per_op) if per_op else 0)
+                continue
+            if opcode in ("dynamic-update-slice", "scatter"):
+                big = max(per_op) if per_op else 0
+                cc.bytes += 2 * (ob - big)
+                continue
+            cc.bytes += rb + ob
+    return comps, entry
+
+
+@dataclasses.dataclass
+class ProgramCost:
+    flops: float
+    hbm_bytes: float
+    collectives: dict
+    wire_bytes: float
+
+
+def top_contributors(hlo: str, n: int = 15) -> list[tuple[float, str]]:
+    """Byte-weighted op sources (same filters/multipliers as the rollup),
+    aggregated by ``op_name`` metadata — the profiling view for §Perf."""
+    comps, entry = parse(hlo)
+    mults: dict[str, float] = {}
+
+    def visit(name, m, depth=0):
+        if depth > 64 or name not in comps:
+            return
+        mults[name] = mults.get(name, 0) + m
+        for callee, cm in comps[name].calls:
+            visit(callee, m * cm, depth + 1)
+
+    visit(entry, 1)
+    agg: dict[str, float] = {}
+    name = None
+    symbols: dict[str, list] = {}
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if line.endswith("{") and ") -> " in line:
+            name = line.split("(")[0].replace("ENTRY", "").strip().lstrip("%")
+            symbols = {}
+            continue
+        if name is None or " = " not in line or name not in comps or comps[name].fused:
+            continue
+        lhs, rhs = line.split(" = ", 1)
+        core = rhs.split(", metadata=")[0]
+        op_m = _OPCODE_RE.search(core)
+        opcode = op_m.group(1) if op_m else ""
+        res_shapes = _SHAPE_RE.findall(core[: op_m.start()] if op_m else core)
+        symbols[lhs.strip().lstrip("%")] = res_shapes
+        if not opcode or opcode in _FREE_OPS:
+            continue
+        args_m = re.search(rf"{re.escape(opcode)}\(([^)]*)\)", core)
+        operand_shapes = []
+        if args_m:
+            for ref in re.findall(r"%([\w\.\-]+)", args_m.group(1)):
+                operand_shapes += symbols.get(ref, [])
+        _, rb = _size_of(res_shapes)
+        _, ob = _size_of(operand_shapes)
+        src = re.search(r'op_name="([^"]+)"', line)
+        key = (src.group(1) if src else f"<{opcode}>")[:120]
+        agg[key] = agg.get(key, 0.0) + (rb + ob) * mults.get(name, 0)
+    return sorted(((b, k) for k, b in agg.items()), reverse=True)[:n]
+
+
+def rollup(hlo: str) -> ProgramCost:
+    comps, entry = parse(hlo)
+    memo: dict[str, tuple[float, float, dict]] = {}
+
+    def visit(name: str, depth=0) -> tuple[float, float, dict]:
+        if name in memo:
+            return memo[name]
+        cc = comps.get(name)
+        if cc is None or depth > 64:
+            return (0.0, 0.0, {})
+        memo[name] = (0.0, 0.0, {})  # cycle guard
+        fl, by = cc.flops, cc.bytes
+        coll: dict = dict(cc.coll_payload)
+        for callee, mult in cc.calls:
+            cf, cb, ccoll = visit(callee, depth + 1)
+            fl += mult * cf
+            by += mult * cb
+            for k, v in ccoll.items():
+                coll[k] = coll.get(k, 0.0) + mult * v
+        memo[name] = (fl, by, coll)
+        return memo[name]
+
+    fl, by, coll = visit(entry) if entry else (0.0, 0.0, {})
+    wire = sum(2 * v if k == "all-reduce" else v for k, v in coll.items())
+    return ProgramCost(flops=fl, hbm_bytes=by, collectives=coll, wire_bytes=wire)

@@ -1,0 +1,50 @@
+"""Serving launcher: batched greedy generation with the static-cache engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1_1b --reduced
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models.common import init_params
+from repro.models.registry import build_model
+from repro.serving.engine import Engine, Request
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, batch_size=args.batch, max_seq=args.max_seq)
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rng.integers(1, cfg.vocab_size, size=rng.integers(4, 24)).astype(np.int32),
+                max_new=args.max_new)
+        for _ in range(args.requests)
+    ]
+    done = []
+    for i in range(0, len(reqs), args.batch):
+        done += eng.generate(reqs[i : i + args.batch])
+    for i, r in enumerate(done):
+        print(f"req{i}: prompt[{len(r.prompt)}] -> {r.out}")
+    return done
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Parameter-spec trees: one model definition drives init, sharding, dry-run.
+
+A model is described as a pytree of ``ParamSpec`` leaves (shape + dtype +
+logical axes). From that single description we derive:
+
+  - materialized parameters for CPU smoke tests / real training (``init``),
+  - ``jax.ShapeDtypeStruct`` stand-ins + ``NamedSharding`` for the
+    allocation-free multi-pod dry-run (``abstract``),
+  - in/out shardings for pjit (``shardings``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import MeshRules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple  # logical axis names, len == len(shape)
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones
+    scale: float | None = None  # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def n_params(tree) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(tree, is_leaf=_is_spec))
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def init_params(tree, key: jax.Array, dtype_override=None):
+    """Materialize a ParamSpec tree into real arrays (smoke tests/training)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dt = dtype_override or spec.dtype
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dt))
+        elif spec.init == "ones":
+            out.append(jnp.full(spec.shape, spec.scale if spec.scale is not None else 1, dt))
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(tree, rules: MeshRules, dtype_override=None):
+    """ShapeDtypeStruct tree with shardings — zero allocation (dry-run path)."""
+
+    def one(spec: ParamSpec):
+        dt = dtype_override or spec.dtype
+        return jax.ShapeDtypeStruct(
+            spec.shape, dt, sharding=rules.sharding(spec.axes, spec.shape)
+        )
+
+    return jax.tree.map(one, tree, is_leaf=_is_spec)
+
+
+def param_shardings(tree, rules: MeshRules):
+    return jax.tree.map(
+        lambda s: rules.sharding(s.axes, s.shape), tree, is_leaf=_is_spec
+    )
+
+
+def param_specs_pspec(tree, rules: MeshRules):
+    """PartitionSpec tree (for use as jit in_shardings)."""
+    return jax.tree.map(lambda s: rules.spec(s.axes, s.shape), tree, is_leaf=_is_spec)

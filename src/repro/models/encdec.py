@@ -1,0 +1,152 @@
+"""Encoder-decoder model (SeamlessM4T-v2 backbone; audio frontend is a stub).
+
+Encoder: bidirectional transformer over precomputed frame embeddings.
+Decoder: causal self-attention + cross-attention over encoder memory.
+Cross-attention K/V are computed once at prefill and cached (production
+serving layout); decode steps touch only the self-attn cache + cached
+cross K/V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as ll
+from repro.models.common import ParamSpec
+from repro.models.transformer import _stack_specs
+
+
+class EncDecModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def param_specs(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        enc_layer = {
+            "ln1": ll.rmsnorm_spec(d),
+            "attn": ll.attention_specs(cfg),
+            "ln2": ll.rmsnorm_spec(d),
+            "mlp": ll.mlp_specs(cfg),
+        }
+        dec_layer = {
+            "ln1": ll.rmsnorm_spec(d),
+            "self_attn": ll.attention_specs(cfg),
+            "lnx": ll.rmsnorm_spec(d),
+            "cross_attn": ll.attention_specs(cfg),
+            "ln2": ll.rmsnorm_spec(d),
+            "mlp": ll.mlp_specs(cfg),
+        }
+        return {
+            "embed": ll.embed_specs(cfg),
+            "frontend_proj": {
+                "w": ParamSpec((d, d), ("embed", None)),
+                "b": ParamSpec((d,), (None,), init="zeros"),
+            },
+            "enc_norm": ll.rmsnorm_spec(d),
+            "encoder": _stack_specs(enc_layer, cfg.encoder_layers),
+            "decoder": _stack_specs(dec_layer, cfg.n_layers),
+        }
+
+    def cache_specs(self, batch: int, seq: int, mem_len: int | None = None):
+        cfg = self.cfg
+        mem = mem_len if mem_len is not None else max(seq // 4, 1)
+        KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        L = cfg.n_layers
+        return {
+            "kv": ll.cache_specs(cfg, batch, seq),
+            "ck": ParamSpec((L, batch, mem, KV, hd), ("layers", "batch", "seq_kv", "kv_heads", None), init="zeros"),
+            "cv": ParamSpec((L, batch, mem, KV, hd), ("layers", "batch", "seq_kv", "kv_heads", None), init="zeros"),
+        }
+
+    # ----------------------------------------------------------------- enc
+    def encode(self, params, frames):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = frames.astype(dt) @ params["frontend_proj"]["w"].astype(dt) + params["frontend_proj"]["b"].astype(dt)
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+        def body(x, lp):
+            h, _ = ll.attention(lp["attn"], ll.rmsnorm(x, lp["ln1"], cfg.norm_eps), cfg, pos, causal=False)
+            x = x + h
+            return x + ll.mlp(lp["mlp"], ll.rmsnorm(x, lp["ln2"], cfg.norm_eps)), None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return ll.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _cross_kv(self, lp, memory):
+        k = jnp.einsum("bsd,dhk->bshk", memory, lp["cross_attn"]["wk"].astype(memory.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", memory, lp["cross_attn"]["wv"].astype(memory.dtype))
+        return k, v
+
+    # ----------------------------------------------------------------- dec
+    def _dec_layer(self, lp, x, q_pos, mem_or_kv, kv_cache, train):
+        cfg = self.cfg
+        h, new_kv = ll.attention(
+            lp["self_attn"], ll.rmsnorm(x, lp["ln1"], cfg.norm_eps), cfg, q_pos, cache=kv_cache
+        )
+        x = x + h
+        xn = ll.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", xn, lp["cross_attn"]["wq"].astype(x.dtype))
+        if isinstance(mem_or_kv, tuple):
+            ck, cv = mem_or_kv
+        else:
+            ck, cv = self._cross_kv(lp, mem_or_kv)
+        mem_pos = jnp.broadcast_to(
+            jnp.arange(ck.shape[1], dtype=jnp.int32)[None], (ck.shape[0], ck.shape[1])
+        )
+        o = ll._attn_core(q, ck, cv, q_pos, mem_pos, causal=False)
+        o = jnp.einsum("bshk,hkd->bsd", o, lp["cross_attn"]["wo"].astype(x.dtype))
+        x = x + o
+        return x + ll.mlp(lp["mlp"], ll.rmsnorm(x, lp["ln2"], cfg.norm_eps)), new_kv, (ck, cv)
+
+    def decode_stack(self, params, x, q_pos, memory=None, cache=None, train=False):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            x = carry
+            lp, lc = xs
+            kv_cache = lc["kv"] if lc is not None else None
+            mem = (lc["ck"], lc["cv"]) if (lc is not None and memory is None) else memory
+            x, new_kv, (ck, cv) = self._dec_layer(lp, x, q_pos, mem, kv_cache, train)
+            ys = {"kv": new_kv, "ck": ck, "cv": cv} if lc is not None else None
+            return x, ys
+
+        fn = jax.checkpoint(body) if train else body
+        if cache is None:
+            x, _ = jax.lax.scan(lambda c, lp: fn(c, (lp, None)), x, params["decoder"])
+            return x, None
+        x, new_cache = jax.lax.scan(fn, x, (params["decoder"], cache))
+        return x, new_cache
+
+    # ------------------------------------------------------------- task fns
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+        memory = self.encode(params, batch["frames"])
+        x = ll.embed(params["embed"], inputs, jnp.dtype(cfg.dtype))
+        B, S = x.shape[:2]
+        q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, _ = self.decode_stack(params, x, q_pos, memory=memory, train=True)
+        logits = ll.unembed(params["embed"], x, cfg)
+        mask = batch.get("loss_mask", jnp.ones_like(targets, jnp.float32))
+        return ll.softmax_xent(logits, targets, mask)
+
+    def prefill(self, params, batch, cache):
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"])
+        x = ll.embed(params["embed"], batch["tokens"], jnp.dtype(cfg.dtype))
+        B, S = x.shape[:2]
+        q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, new_cache = self.decode_stack(params, x, q_pos, memory=memory, cache=cache)
+        return ll.unembed(params["embed"], x[:, -1:], cfg), new_cache
+
+    def decode(self, params, batch, cache):
+        cfg = self.cfg
+        x = ll.embed(params["embed"], batch["token"], jnp.dtype(cfg.dtype))
+        B = x.shape[0]
+        q_pos = jnp.broadcast_to(batch["pos"].astype(jnp.int32).reshape(1, 1), (B, 1))
+        x, new_cache = self.decode_stack(params, x, q_pos, memory=None, cache=cache)
+        return ll.unembed(params["embed"], x, cfg), new_cache

@@ -1,0 +1,298 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention, SwiGLU MLP.
+
+All functions are pure; parameters are dicts of arrays built from
+``ParamSpec`` trees (see common.py). Attention is blockwise (flash-style):
+exact softmax per q-block against full KV with a checkpointed block body,
+so the S×S score matrix is never materialized and backward recomputes
+per-block scores — the pure-JAX shape of the memory-efficient attention
+XLA:TPU fuses well.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+BIG_POS = 1 << 30  # kv_position sentinel for unfilled cache slots
+
+
+# ---------------------------------------------------------------- norms/rope
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    # mean-square reduces in f32, but the (B,S,d)-wide multiplies stay in the
+    # input dtype: an f32 x-wide intermediate makes XLA sink the convert into
+    # the layer-residual stack, storing per-layer activations in f32 (2× HBM;
+    # EXPERIMENTS.md §Perf granite iteration 3).
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+    return x * scale * w.astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x (B, S, H, hd), positions (B, S) -> rotated x."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+def attention_specs(cfg, cross: bool = False) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    p = {
+        "wq": ParamSpec((d, H, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((d, KV, hd), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((d, KV, hd), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((H, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamSpec((H, hd), ("heads", None), init="zeros")
+        p["bk"] = ParamSpec((KV, hd), ("kv_heads", None), init="zeros")
+        p["bv"] = ParamSpec((KV, hd), ("kv_heads", None), init="zeros")
+    return p
+
+
+def _pick_kv_block(skv: int) -> int:
+    for b in (1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if skv % b == 0:
+            return b
+    return 1
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _flash(q, k, v, q_pos, kv_pos, causal: bool, kv_block: int):
+    out, _ = _flash_fwd_impl(q, k, v, q_pos, kv_pos, causal, kv_block)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, q_pos, kv_pos, causal, kv_block):
+    """Online-softmax over KV blocks: the (Sq, Skv) score matrix never
+    materializes (per-block (Sq, kvb) tiles only) — flash attention in
+    pure JAX, with a custom VJP so the backward recomputes tiles instead
+    of saving per-block scan carries (§Perf: attention was the dominant
+    HBM term for every full-attention train/prefill cell)."""
+    B, Sq, H, hd = q.shape
+    scale = hd ** -0.5
+    nb = k.shape[1] // kv_block
+    qf = q.astype(jnp.float32)
+    ks = k.reshape(B, nb, kv_block, H, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nb, kv_block, H, hd).transpose(1, 0, 2, 3, 4)
+    ps = kv_pos.reshape(B, nb, kv_block).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, pb = xs
+        s = jnp.einsum("bqhd,bshd->bqhs", qf, kb.astype(jnp.float32)) * scale
+        mask = (pb[:, None, :] <= q_pos[:, :, None]) if causal else (pb[:, None, :] < BIG_POS)
+        s = jnp.where(mask[:, :, None, :], s, -1e30)
+        m2 = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m2)
+        p = jnp.exp(s - m2[..., None])
+        l2 = l * corr + p.sum(axis=-1)
+        acc2 = acc * corr[..., None] + jnp.einsum("bqhs,bshd->bqhd", p, vb.astype(jnp.float32))
+        return (m2, l2, acc2), None
+
+    m0 = jnp.full((B, Sq, H), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Sq, H), jnp.float32)
+    a0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, ps))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, q_pos, kv_pos, causal, kv_block):
+    out, lse = _flash_fwd_impl(q, k, v, q_pos, kv_pos, causal, kv_block)
+    return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+
+def _flash_bwd(causal, kv_block, res, do):
+    q, k, v, q_pos, kv_pos, out, lse = res
+    B, Sq, H, hd = q.shape
+    scale = hd ** -0.5
+    nb = k.shape[1] // kv_block
+    qf = q.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    delta = (dof * out.astype(jnp.float32)).sum(axis=-1)  # (B,Sq,H)
+    ks = k.reshape(B, nb, kv_block, H, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nb, kv_block, H, hd).transpose(1, 0, 2, 3, 4)
+    ps = kv_pos.reshape(B, nb, kv_block).transpose(1, 0, 2)
+
+    def step(dq, xs):
+        kb, vb, pb = xs
+        s = jnp.einsum("bqhd,bshd->bqhs", qf, kb.astype(jnp.float32)) * scale
+        mask = (pb[:, None, :] <= q_pos[:, :, None]) if causal else (pb[:, None, :] < BIG_POS)
+        s = jnp.where(mask[:, :, None, :], s, -1e30)
+        p = jnp.exp(s - lse[..., None])  # exact softmax via saved lse
+        dp = jnp.einsum("bqhd,bshd->bqhs", dof, vb.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dqb = jnp.einsum("bqhs,bshd->bqhd", ds, kb.astype(jnp.float32))
+        dkb = jnp.einsum("bqhs,bqhd->bshd", ds, qf)
+        dvb = jnp.einsum("bqhs,bqhd->bshd", p, dof)
+        return dq + dqb, (dkb, dvb)
+
+    dq0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(step, dq0, (ks, vs, ps))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, nb * kv_block, H, hd).astype(k.dtype)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, nb * kv_block, H, hd).astype(v.dtype)
+    import numpy as _np
+
+    zpos_q = _np.zeros(q_pos.shape, jax.dtypes.float0)
+    zpos_kv = _np.zeros(kv_pos.shape, jax.dtypes.float0)
+    return dq.astype(q.dtype), dk, dv, zpos_q, zpos_kv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _attn_core(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, KV, hd)
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,  # (B, Sq)
+    kv_pos: jnp.ndarray,  # (B, Skv); unfilled slots = BIG_POS
+    causal: bool,
+    q_block: int = 256,
+) -> jnp.ndarray:
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+
+    if Sq == 1:
+        # decode: one exact softmax over the (seq-sharded) cache, grouped-KV
+        # form — repeating kv heads here would materialize g× the cache,
+        # whereas the score tensor is tiny; memory-bound by the single cache
+        # read, which *is* the decode roofline.
+        scale = hd ** -0.5
+        qg = q.reshape(B, 1, KV, g, hd)
+        s = jnp.einsum("bqkgh,bskh->bqkgs", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+        mask = (kv_pos[:, None, :] <= q_pos[:, :, None]) if causal else (kv_pos[:, None, :] < BIG_POS)
+        s = jnp.where(mask[:, :, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bqkgs,bskh->bqkgh", p, v.astype(jnp.float32))
+        return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+    # train/prefill: score on the flat H dim — a (KV, g) reshape would leave
+    # the head axis unshardable whenever kv_heads < |model| (GSPMD then
+    # replicates every device's scores — 16× attention HBM on kv=8 archs).
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    return _flash(q, k, v, q_pos, kv_pos, causal, _pick_kv_block(k.shape[1]))
+
+
+def attention(
+    p: dict,
+    x: jnp.ndarray,  # (B, Sq, d)
+    cfg,
+    q_pos: jnp.ndarray,
+    *,
+    kv_x: jnp.ndarray | None = None,  # cross-attention memory
+    kv_pos: jnp.ndarray | None = None,
+    cache: dict | None = None,  # {"k","v","pos"} decode/prefill cache
+    use_rope: bool = True,
+    causal: bool = True,
+) -> tuple[jnp.ndarray, dict | None]:
+    """Returns (out (B, Sq, d), updated cache or None)."""
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if kv_x is None:
+        kpos = q_pos if kv_pos is None else kv_pos
+    else:
+        kpos = kv_pos
+    if use_rope and kv_x is None:
+        q = rope(q, q_pos, cfg.rope_theta)
+        k = rope(k, kpos, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # write this step's k/v at the slot(s) given by q_pos (decode: Sq==1)
+        idx = q_pos[0, 0]  # uniform position across batch (serving layout)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.broadcast_to(q_pos, cache["pos"][:, : q_pos.shape[1]].shape), (0, idx)
+        )
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        k, v, kpos = ck, cv, cpos
+
+    out = _attn_core(q, k, v, q_pos, kpos, causal=causal)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def cache_specs(cfg, batch: int, seq: int, layers: int | None = None) -> dict:
+    """KV-cache ParamSpec tree. Sequence axis is SP-sharded (flash-decode:
+    per-shard partial softmax merged by XLA collectives)."""
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    L = cfg.n_layers if layers is None else layers
+    lead = (L,) if L else ()
+    lax = ("layers",) if L else ()
+    return {
+        "k": ParamSpec(lead + (batch, seq, KV, hd), lax + ("batch", "seq_kv", "kv_heads", None), init="zeros"),
+        "v": ParamSpec(lead + (batch, seq, KV, hd), lax + ("batch", "seq_kv", "kv_heads", None), init="zeros"),
+        "pos": ParamSpec(lead + (batch, seq), lax + ("batch", "seq_kv"), dtype=jnp.int32, init="ones", scale=float(BIG_POS)),
+    }
+
+
+# ---------------------------------------------------------------- MLP
+def mlp_specs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wi": ParamSpec((d, f), ("embed", "ff")),
+        "wg": ParamSpec((d, f), ("embed", "ff")),
+        "wo": ParamSpec((f, d), ("ff", "embed")),
+    }
+
+
+def mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * (x @ p["wi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embeddings
+def embed_specs(cfg) -> dict:
+    return {
+        "tok": ParamSpec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), scale=1.0),
+        "norm_f": rmsnorm_spec(cfg.d_model),
+        "head": ParamSpec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab")),
+    }
+
+
+def embed(p: dict, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+
+
+def unembed(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    x = rmsnorm(x, p["norm_f"], cfg.norm_eps)
+    return x @ p["head"].astype(x.dtype)  # (B, S, padded_vocab), vocab-sharded
+
+
+def softmax_xent(logits: jnp.ndarray, targets: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token CE in fp32; ``mask`` zeroes padding/image positions."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = (lse - gold) * mask
+    return loss.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,130 @@
+"""Architecture registry: config -> model implementation + input specs.
+
+``input_specs(cfg, shape)`` builds the ParamSpec trees for a shape cell's
+*inputs* (batch + cache); the dry-run turns them into ShapeDtypeStructs
+(zero allocation), smoke tests materialize tiny real arrays from the
+reduced configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+from repro.models.encdec import EncDecModel
+from repro.models.ssm_models import XLSTMModel, ZambaModel
+from repro.models.transformer import DecoderLM
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq=524288, global_batch=1),
+}
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return XLSTMModel(cfg)
+    if cfg.family == "hybrid":
+        return ZambaModel(cfg)
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    raise ValueError(cfg.family)
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) for a (arch, shape) cell."""
+    s = SHAPES[shape_name]
+    if s["kind"] == "decode" and not cfg.supports_decode:
+        return False, "encoder-only arch: no decode step"
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch: 0.5M-token dense KV pass skipped per assignment"
+    return True, ""
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str, seq=None, batch=None) -> dict:
+    """ParamSpec tree for the input batch of a shape cell."""
+    s = SHAPES[shape_name]
+    S = seq or s["seq"]
+    B = batch or s["global_batch"]
+    kind = s["kind"]
+    i32 = jnp.int32
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+
+    def tok(shape):
+        return ParamSpec(shape, ("batch", None), dtype=i32, init="zeros")
+
+    if kind == "train":
+        out = {"tokens": tok((B, S + 1))}
+        if cfg.family == "vlm":
+            P = cfg.frontend_tokens
+            out = {
+                "tokens": tok((B, S - P + 1)),
+                "patches": ParamSpec((B, P, d), ("batch", None, None), dtype=dt),
+            }
+        if cfg.family == "encdec":
+            out["frames"] = ParamSpec((B, max(S // 4, 1), d), ("batch", None, None), dtype=dt)
+        return out
+    if kind == "prefill":
+        out = {"tokens": tok((B, S))}
+        if cfg.family == "vlm":
+            P = cfg.frontend_tokens
+            out = {
+                "tokens": tok((B, S - P)),
+                "patches": ParamSpec((B, P, d), ("batch", None, None), dtype=dt),
+            }
+        if cfg.family == "encdec":
+            out["frames"] = ParamSpec((B, max(S // 4, 1), d), ("batch", None, None), dtype=dt)
+        return out
+    # decode: one token against a cache of length S
+    return {
+        "token": tok((B, 1)),
+        "pos": ParamSpec((), (), dtype=i32, init="zeros"),
+    }
+
+
+def cache_specs_for(cfg: ModelConfig, shape_name: str, seq=None, batch=None):
+    s = SHAPES[shape_name]
+    if s["kind"] == "train":
+        return None
+    S = seq or s["seq"]
+    B = batch or s["global_batch"]
+    model = build_model(cfg)
+    if cfg.family == "encdec":
+        return model.cache_specs(B, S, mem_len=max(S // 4, 1))
+    return model.cache_specs(B, S)
+
+
+def step_fn(cfg: ModelConfig, shape_name: str):
+    """The function a cell lowers: loss (train) or prefill/decode (serve)."""
+    model = build_model(cfg)
+    kind = SHAPES[shape_name]["kind"]
+    if kind == "train":
+        return lambda params, batch: model.loss(params, batch)
+    if kind == "prefill":
+        return lambda params, batch, cache: model.prefill(params, batch, cache)
+    return lambda params, batch, cache: model.decode(params, batch, cache)
+
+
+def materialize_batch(cfg: ModelConfig, shape_name: str, seq: int, batch: int, key):
+    """Small real batch for smoke tests (reduced configs)."""
+    specs = batch_specs(cfg, shape_name, seq=seq, batch=batch)
+    rng = np.random.default_rng(0)
+    out = {}
+    for k, sp in specs.items():
+        if sp.dtype == jnp.int32 and k in ("tokens", "token"):
+            out[k] = jnp.asarray(rng.integers(0, cfg.vocab_size, size=sp.shape), jnp.int32)
+        elif k == "pos":
+            out[k] = jnp.asarray(seq - 1, jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=sp.shape), jnp.float32).astype(jnp.dtype(cfg.dtype))
+    return out

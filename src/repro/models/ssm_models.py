@@ -1,0 +1,196 @@
+"""xLSTM (ssm family) and Zamba2 (hybrid family) model drivers.
+
+xLSTM: groups of (slstm_every - 1) mLSTM blocks + 1 sLSTM block, scanned.
+Zamba2: groups of ``attn_every`` Mamba2 blocks followed by one *shared*
+(weight-tied) full-attention block — the shared weights live outside the
+scan; each invocation keeps its own KV cache (stacked over groups).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as ll
+from repro.models import ssm
+from repro.models.common import ParamSpec
+from repro.models.transformer import _stack_specs
+
+
+class XLSTMModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        assert cfg.n_layers % cfg.slstm_every == 0
+        self.n_groups = cfg.n_layers // cfg.slstm_every
+        self.m_per_group = cfg.slstm_every - 1
+
+    def param_specs(self):
+        cfg = self.cfg
+        group = {
+            "mlstm": _stack_specs(ssm.mlstm_specs(cfg), self.m_per_group),
+            "slstm": ssm.slstm_specs(cfg),
+        }
+        return {
+            "embed": ll.embed_specs(cfg),
+            "groups": _stack_specs(group, self.n_groups),
+        }
+
+    def cache_specs(self, batch: int, seq: int):
+        g, m = self.n_groups, self.m_per_group
+        return {
+            "mlstm": ssm.mlstm_state_specs(self.cfg, batch, lead=(g, m), lead_axes=("layers", "layers")),
+            "slstm": ssm.slstm_state_specs(self.cfg, batch, lead=(g,), lead_axes=("layers",)),
+        }
+
+    def _group(self, gp, x, gc, single_step):
+        cfg = self.cfg
+
+        def mbody(carry, xs):
+            lp, lc = xs
+            y, st = ssm.mlstm(lp, carry, cfg, state=lc, single_step=single_step)
+            return y, st
+
+        x, m_states = jax.lax.scan(mbody, x, (gp["mlstm"], gc["mlstm"] if gc else None))
+        x, s_state = ssm.slstm(gp["slstm"], x, cfg, state=gc["slstm"] if gc else None, single_step=single_step)
+        return x, {"mlstm": m_states, "slstm": s_state}
+
+    def backbone(self, params, x, cache=None, train=False, single_step=False):
+        def body(carry, xs):
+            gp, gc = xs
+            return self._group(gp, carry, gc, single_step)
+
+        fn = jax.checkpoint(body) if train else body
+        if cache is None:
+            zero = jax.tree.map(
+                lambda s: jnp.zeros(s.shape[1:], s.dtype),
+                self.cache_specs(x.shape[0], 0),
+                is_leaf=lambda t: isinstance(t, ParamSpec),
+            )
+            # materialize fresh zero states (m-stabilizers start at -inf-ish)
+            zero["mlstm"]["m"] = jnp.full_like(zero["mlstm"]["m"], -1e30)
+            zero["slstm"]["n"] = jnp.ones_like(zero["slstm"]["n"])
+            cache_xs = jax.tree.map(
+                lambda z: jnp.broadcast_to(z[None], (self.n_groups,) + z.shape), zero
+            )
+        else:
+            cache_xs = cache
+        x, new_cache = jax.lax.scan(fn, x, (params["groups"], cache_xs))
+        return x, new_cache
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+        x = ll.embed(params["embed"], inputs, jnp.dtype(cfg.dtype))
+        x, _ = self.backbone(params, x, train=True)
+        logits = ll.unembed(params["embed"], x, cfg)
+        mask = batch.get("loss_mask", jnp.ones_like(targets, jnp.float32))
+        return ll.softmax_xent(logits, targets, mask)
+
+    def prefill(self, params, batch, cache):
+        x = ll.embed(params["embed"], batch["tokens"], jnp.dtype(self.cfg.dtype))
+        x, new_cache = self.backbone(params, x, cache=cache)
+        return ll.unembed(params["embed"], x[:, -1:], self.cfg), new_cache
+
+    def decode(self, params, batch, cache):
+        x = ll.embed(params["embed"], batch["token"], jnp.dtype(self.cfg.dtype))
+        x, new_cache = self.backbone(params, x, cache=cache, single_step=True)
+        return ll.unembed(params["embed"], x, self.cfg), new_cache
+
+
+class ZambaModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        assert cfg.n_layers % cfg.attn_every == 0
+        self.n_groups = cfg.n_layers // cfg.attn_every
+        self.m_per_group = cfg.attn_every
+
+    def param_specs(self):
+        cfg = self.cfg
+        group = {"mamba": _stack_specs(ssm.mamba2_specs(cfg), self.m_per_group)}
+        shared = {
+            "ln": ll.rmsnorm_spec(cfg.d_model),
+            "attn": ll.attention_specs(cfg),
+            "ln2": ll.rmsnorm_spec(cfg.d_model),
+            "mlp": ll.mlp_specs(cfg),
+        }
+        return {
+            "embed": ll.embed_specs(cfg),
+            "groups": _stack_specs(group, self.n_groups),
+            "shared_attn": shared,
+        }
+
+    def cache_specs(self, batch: int, seq: int):
+        g, m = self.n_groups, self.m_per_group
+        return {
+            "mamba": ssm.mamba2_state_specs(self.cfg, batch, lead=(g, m), lead_axes=("layers", "layers")),
+            "kv": ll.cache_specs(self.cfg, batch, seq, layers=g),
+        }
+
+    def backbone(self, params, x, q_pos, cache=None, train=False, single_step=False):
+        cfg = self.cfg
+        shared = params["shared_attn"]
+
+        def body(carry, xs):
+            x = carry
+            gp, gc = xs
+
+            def mbody(h, mxs):
+                lp, lc = mxs
+                y, st = ssm.mamba2(lp, h, cfg, state=lc, single_step=single_step)
+                return h + y, st
+
+            x, m_states = jax.lax.scan(mbody, x, (gp["mamba"], gc["mamba"] if gc else None))
+            # shared (weight-tied) attention block, own KV per invocation
+            h, new_kv = ll.attention(
+                shared["attn"], ll.rmsnorm(x, shared["ln"], cfg.norm_eps), cfg, q_pos,
+                cache=gc["kv"] if gc else None,
+            )
+            x = x + h
+            x = x + ll.mlp(shared["mlp"], ll.rmsnorm(x, shared["ln2"], cfg.norm_eps))
+            return x, {"mamba": m_states, "kv": new_kv}
+
+        fn = jax.checkpoint(body) if train else body
+        if cache is None:
+            B = x.shape[0]
+            zero_m = jax.tree.map(
+                lambda s: jnp.zeros((self.n_groups,) + s.shape, s.dtype),
+                ssm.mamba2_state_specs(cfg, B, lead=(self.m_per_group,), lead_axes=("layers",)),
+                is_leaf=lambda t: isinstance(t, ParamSpec),
+            )
+            cache_xs = {"mamba": zero_m, "kv": None}
+            x, states = jax.lax.scan(
+                lambda c, xs: fn(c, (xs[0], {"mamba": xs[1]["mamba"], "kv": None})),
+                x,
+                (params["groups"], cache_xs),
+            )
+            return x, None
+        x, new_cache = jax.lax.scan(fn, x, (params["groups"], cache))
+        return x, new_cache
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+        x = ll.embed(params["embed"], inputs, jnp.dtype(cfg.dtype))
+        B, S = x.shape[:2]
+        q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, _ = self.backbone(params, x, q_pos, train=True)
+        logits = ll.unembed(params["embed"], x, cfg)
+        mask = batch.get("loss_mask", jnp.ones_like(targets, jnp.float32))
+        return ll.softmax_xent(logits, targets, mask)
+
+    def prefill(self, params, batch, cache):
+        cfg = self.cfg
+        x = ll.embed(params["embed"], batch["tokens"], jnp.dtype(cfg.dtype))
+        B, S = x.shape[:2]
+        q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, new_cache = self.backbone(params, x, q_pos, cache=cache)
+        return ll.unembed(params["embed"], x[:, -1:], cfg), new_cache
+
+    def decode(self, params, batch, cache):
+        cfg = self.cfg
+        x = ll.embed(params["embed"], batch["token"], jnp.dtype(cfg.dtype))
+        B = x.shape[0]
+        q_pos = jnp.broadcast_to(batch["pos"].astype(jnp.int32).reshape(1, 1), (B, 1))
+        x, new_cache = self.backbone(params, x, q_pos, cache=cache, single_step=True)
+        return ll.unembed(params["embed"], x, cfg), new_cache

@@ -1,0 +1,139 @@
+"""Decoder-only LM covering the dense / moe / vlm families.
+
+Layers run under ``lax.scan`` (stacked params: leading (L,) dim) with
+per-layer ``jax.checkpoint`` in training — compile time and live-activation
+memory stay O(1) in depth. The VLM variant prepends connector-projected
+patch embeddings (frontend stub per the assignment).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as ll
+from repro.models.common import ParamSpec
+from repro.models.moe import moe_ffn, moe_specs
+
+
+def _stack_specs(spec_tree: dict, n: int) -> dict:
+    """Give every leaf a leading (n,) 'layers' axis."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init, s.scale),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+class DecoderLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ---------------------------------------------------------------- specs
+    def layer_specs(self) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        p = {
+            "ln1": ll.rmsnorm_spec(d),
+            "attn": ll.attention_specs(cfg),
+            "ln2": ll.rmsnorm_spec(d),
+        }
+        if cfg.n_experts:
+            p["moe"] = moe_specs(cfg)
+        else:
+            p["mlp"] = ll.mlp_specs(cfg)
+        return p
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        p = {
+            "embed": ll.embed_specs(cfg),
+            "layers": _stack_specs(self.layer_specs(), cfg.n_layers),
+        }
+        if cfg.frontend == "vision":
+            p["connector"] = {
+                "w": ParamSpec((cfg.d_model, cfg.d_model), ("embed", None)),
+                "b": ParamSpec((cfg.d_model,), (None,), init="zeros"),
+            }
+        return p
+
+    def cache_specs(self, batch: int, seq: int) -> dict:
+        return {"kv": ll.cache_specs(self.cfg, batch, seq)}
+
+    # -------------------------------------------------------------- forward
+    def _layer(self, p, x, q_pos, cache, train: bool):
+        cfg = self.cfg
+        h, new_cache = ll.attention(
+            p["attn"], ll.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, q_pos, cache=cache
+        )
+        x = x + h
+        hn = ll.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            h, aux = moe_ffn(p["moe"], hn, cfg)
+        else:
+            h, aux = ll.mlp(p["mlp"], hn), jnp.float32(0)
+        return x + h, new_cache, aux
+
+    def backbone(self, params, x, q_pos, cache=None, train=False):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            x, aux = carry
+            lp, lc = xs
+            x, new_c, a = self._layer(lp, x, q_pos, lc, train)
+            return (x, aux + a), new_c
+
+        fn = jax.checkpoint(body) if train else body
+        lc = cache["kv"] if cache is not None else None
+        if lc is None:
+            lc_xs = None
+            (x, aux), _ = jax.lax.scan(lambda c, lp: fn(c, (lp, None)), (x, jnp.float32(0)), params["layers"])
+            new_cache = None
+        else:
+            (x, aux), new_kv = jax.lax.scan(fn, (x, jnp.float32(0)), (params["layers"], lc))
+            new_cache = {"kv": new_kv}
+        return x, aux, new_cache
+
+    def logits(self, params, x):
+        return ll.unembed(params["embed"], x, self.cfg)
+
+    def embed_inputs(self, params, tokens, patches=None):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = ll.embed(params["embed"], tokens, dt)
+        if patches is not None:
+            px = patches.astype(dt) @ params["connector"]["w"].astype(dt) + params["connector"]["b"].astype(dt)
+            x = jnp.concatenate([px, x], axis=1)
+        return x
+
+    # ------------------------------------------------------------ task fns
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+        patches = batch.get("patches")
+        x = self.embed_inputs(params, inputs, patches)
+        B, S = x.shape[0], x.shape[1]
+        q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, aux, _ = self.backbone(params, x, q_pos, train=True)
+        if patches is not None:
+            x = x[:, patches.shape[1] :]
+        logits = self.logits(params, x)
+        mask = batch.get("loss_mask", jnp.ones_like(targets, jnp.float32))
+        return ll.softmax_xent(logits, targets, mask) + 0.01 * aux
+
+    def prefill(self, params, batch, cache):
+        tokens = batch["tokens"]
+        patches = batch.get("patches")
+        x = self.embed_inputs(params, tokens, patches)
+        B, S = x.shape[0], x.shape[1]
+        q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, _, new_cache = self.backbone(params, x, q_pos, cache=cache)
+        return self.logits(params, x[:, -1:]), new_cache
+
+    def decode(self, params, batch, cache):
+        token, pos = batch["token"], batch["pos"]  # (B,1), scalar int32
+        x = self.embed_inputs(params, token)
+        B = x.shape[0]
+        q_pos = jnp.broadcast_to(pos.astype(jnp.int32).reshape(1, 1), (B, 1))
+        x, _, new_cache = self.backbone(params, x, q_pos, cache=cache)
+        return self.logits(params, x), new_cache

@@ -1,0 +1,3 @@
+from repro.sharding.rules import MeshRules, logical_to_spec
+
+__all__ = ["MeshRules", "logical_to_spec"]

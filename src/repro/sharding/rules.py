@@ -1,0 +1,71 @@
+"""Logical-axis -> mesh-axis sharding rules, divisibility-aware.
+
+Every tensor in the framework is annotated with *logical* axis names
+("batch", "heads", "ff", "experts", "vocab", ...). A ``MeshRules`` bound to
+a mesh resolves them to ``PartitionSpec``s, silently falling back to
+replication when the dimension size does not divide the mesh axis extent
+(e.g. xlstm's 4 heads on a 16-way model axis, or seamless' 256206 vocab
+before padding). This is the single policy point for TP/DP/EP/SP layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (tried in order; tuple entries combine)
+DEFAULT_RULES: dict[str, tuple] = {
+    "batch": (("pod", "data"), ("data",)),  # DP over pod+data when present
+    "heads": (("model",),),  # TP: attention q-heads
+    "kv_heads": (("model",),),  # TP: kv heads (replicated if indivisible)
+    "ff": (("model",),),  # TP: MLP hidden
+    "experts": (("model",),),  # EP: MoE experts
+    "vocab": (("model",),),  # TP: embedding/logits vocab shard
+    "seq_kv": (("model",),),  # SP: decode KV-cache sequence shard
+    "d_inner": (("model",),),  # TP: SSM inner channels
+    "embed": (),
+    "layers": (),
+    "seq": (),
+    None: (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+    rules: dict | None = None
+
+    def _axes_for(self, logical: str | None, dim_size: int) -> tuple[str, ...] | None:
+        table = self.rules or DEFAULT_RULES
+        for cand in table.get(logical, ()):
+            cand = tuple(a for a in cand if a in self.mesh.shape)
+            if not cand:
+                continue
+            extent = 1
+            for a in cand:
+                extent *= self.mesh.shape[a]
+            if extent > 1 and dim_size % extent == 0:
+                return cand
+        return None
+
+    def spec(self, logical_axes: tuple, shape: tuple) -> P:
+        """PartitionSpec for a tensor given its logical axes and shape."""
+        assert len(logical_axes) == len(shape), (logical_axes, shape)
+        used: set[str] = set()
+        out = []
+        for name, size in zip(logical_axes, shape):
+            axes = self._axes_for(name, size)
+            if axes and not (set(axes) & used):
+                out.append(axes if len(axes) > 1 else axes[0])
+                used.update(axes)
+            else:
+                out.append(None)
+        return P(*out)
+
+    def sharding(self, logical_axes: tuple, shape: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+def logical_to_spec(mesh: Mesh, logical_axes: tuple, shape: tuple) -> P:
+    return MeshRules(mesh).spec(logical_axes, shape)

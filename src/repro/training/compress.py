@@ -1,0 +1,79 @@
+"""Gradient compression for the slow (inter-pod) reduction axis.
+
+Two schemes, both with error feedback (the residual of this step's
+compression is added to next step's gradient, so compression error does not
+accumulate — Karimireddy et al. 2019):
+
+  - int8 quantization with per-tensor scale and stochastic rounding,
+  - top-k magnitude sparsification.
+
+``compressed_psum`` is the shard_map building block for a real multi-pod
+run: quantize -> integer psum over the pod axis -> dequantize; intra-pod
+reductions stay exact. On a single host the same code paths are exercised
+by the tests with fake devices.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(g: jnp.ndarray, key: jax.Array) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (int8 values, scale). Stochastic rounding keeps E[deq] = g."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    x = g / scale
+    noise = jax.random.uniform(key, g.shape, jnp.float32) - 0.5
+    q = jnp.clip(jnp.round(x + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_compress(g: jnp.ndarray, frac: float) -> jnp.ndarray:
+    """Keep the top-``frac`` fraction by magnitude (dense mask form)."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def compress_with_feedback(
+    grads, residuals, key: jax.Array, scheme: str = "int8", topk_frac: float = 0.05
+):
+    """grads+residual -> (compressed-then-decompressed grads, new residuals).
+
+    The returned grads are what the slow-axis reduction would deliver; the
+    residual tree holds the per-tensor compression error for feedback.
+    """
+    leaves, td = jax.tree.flatten(grads)
+    res = jax.tree.leaves(residuals)
+    keys = jax.random.split(key, len(leaves))
+    out, new_res = [], []
+    for g, r, k in zip(leaves, res, keys):
+        x = g.astype(jnp.float32) + r
+        if scheme == "int8":
+            q, s = int8_compress(x, k)
+            y = int8_decompress(q, s)
+        elif scheme == "topk":
+            y = topk_compress(x, topk_frac)
+        else:
+            raise ValueError(scheme)
+        out.append(y.astype(g.dtype))
+        new_res.append(x - y)
+    return jax.tree.unflatten(td, out), jax.tree.unflatten(td, new_res)
+
+
+def compressed_psum(x: jnp.ndarray, axis: str, key: jax.Array) -> jnp.ndarray:
+    """shard_map building block: int8-quantized psum over ``axis``."""
+    q, scale = int8_compress(x.astype(jnp.float32), key)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis)
+    # scales differ per shard: psum the dequantized contribution weight
+    return qsum.astype(jnp.float32) * jax.lax.pmax(scale, axis)
+
+
+def init_residuals(grads_or_params):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_or_params)

@@ -1,0 +1,89 @@
+"""Training loop: step function + checkpointing + fault handling.
+
+The loop is deliberately framework-grade: async checkpoints every
+``ckpt_every`` steps, restart-from-latest on (injected or real) failures,
+straggler flagging with a data-pipeline skip hook, and metric logging.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.fault.failures import FailureInjector, StragglerMonitor, run_with_restarts
+from repro.training.step import TrainConfig, make_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    log_every: int = 10
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    max_restarts: int = 5
+    straggler_threshold: float = 3.0
+
+
+class Trainer:
+    def __init__(
+        self,
+        model,
+        train_cfg: TrainConfig,
+        loop_cfg: LoopConfig,
+        batches: Callable[[], Iterator[dict]],
+        rules=None,
+        failure_injector: FailureInjector | None = None,
+    ):
+        self.model = model
+        self.train_cfg = train_cfg
+        self.loop = loop_cfg
+        self.batches = batches
+        self.rules = rules
+        self.injector = failure_injector
+        self.ckpt = CheckpointManager(loop_cfg.ckpt_dir)
+        self.monitor = StragglerMonitor(loop_cfg.straggler_threshold)
+        self.history: list[dict] = []
+        self._step_fn = jax.jit(make_train_step(model, train_cfg, rules))
+
+    def _fresh_state(self):
+        return make_train_state(self.model, jax.random.PRNGKey(42), self.train_cfg, self.rules)
+
+    def _run_once(self, start_step: int) -> int:
+        if start_step > 0:
+            state, extra = self.ckpt.restore()
+            state["opt"]["step"] = jax.numpy.asarray(state["opt"]["step"])
+        else:
+            state = self._fresh_state()
+        gen = self.batches()
+        # fast-forward the (seeded) generator so data order is reproducible
+        for _ in range(start_step):
+            next(gen)
+        step = start_step
+        while step < self.loop.total_steps:
+            batch = next(gen)
+            if self.injector is not None:
+                self.injector.maybe_fail(step)
+            t0 = time.perf_counter()
+            state, metrics = self._step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if self.monitor.record(step, dt):
+                pass  # mitigation hook: pipeline.skip_slow() on a real cluster
+            if step % self.loop.log_every == 0 or step == self.loop.total_steps - 1:
+                self.history.append({"step": step, "loss": loss, "dt": dt})
+            step += 1
+            if step % self.loop.ckpt_every == 0 or step == self.loop.total_steps:
+                self.ckpt.save(step - 1, state, extra={"loss": loss}, block=False)
+        self.ckpt.wait()
+        return step
+
+    def train(self) -> int:
+        final = run_with_restarts(
+            self._run_once, self.ckpt.latest_step, max_restarts=self.loop.max_restarts
+        )
+        self.ckpt.wait()
+        return final

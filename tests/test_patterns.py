@@ -1,0 +1,56 @@
+"""Closed / maximal / top-rank-k pattern families vs first principles."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.oracle import mine_bruteforce
+from repro.core.patterns import closed_itemsets, maximal_itemsets, top_rank_k
+from repro.core.prepost import mine_prepost
+from repro.data.synth import random_db
+
+
+def _brute_closed(itemsets):
+    return {
+        s: v
+        for s, v in itemsets.items()
+        if not any(set(s) < set(t) and itemsets[t] == v for t in itemsets)
+    }
+
+
+def _brute_maximal(itemsets):
+    return {
+        s: v for s, v in itemsets.items() if not any(set(s) < set(t) for t in itemsets)
+    }
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tx=st.integers(1, 40),
+    n_items=st.integers(1, 9),
+    min_count=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_closed_and_maximal_match_definitions(n_tx, n_items, min_count, seed):
+    rng = np.random.default_rng(seed)
+    rows = random_db(rng, n_tx, n_items, min(6, n_items))
+    mined = mine_prepost(rows, n_items, min_count).itemsets
+    assert closed_itemsets(mined) == _brute_closed(mined)
+    assert maximal_itemsets(mined) == _brute_maximal(mined)
+    # maximal ⊆ closed ⊆ all
+    assert set(maximal_itemsets(mined)) <= set(closed_itemsets(mined)) <= set(mined)
+
+
+def test_closed_on_paper_example(paper_db):
+    rows, n_items = paper_db
+    mined = mine_prepost(rows, n_items, 3).itemsets
+    closed = closed_itemsets(mined)
+    # {c} (sup 3) is NOT closed: superset {b,c} has the same support
+    assert (2,) not in closed and (1, 2) in closed
+    # {b} (sup 5) is closed (no superset at 5)
+    assert (1,) in closed
+
+
+def test_top_rank_k():
+    mined = {(1,): 5, (2,): 5, (3,): 4, (1, 2): 3, (4,): 2}
+    assert top_rank_k(mined, 1) == {(1,): 5, (2,): 5}
+    assert top_rank_k(mined, 2) == {(1,): 5, (2,): 5, (3,): 4}
+    assert len(top_rank_k(mined, 10)) == 5

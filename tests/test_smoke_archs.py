@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs. Full configs are exercised only by
+the dry-run (launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models.common import init_params
+from repro.models.registry import applicable, build_model, cache_specs_for, materialize_batch
+
+SMOKE_SEQ = 32
+SMOKE_BATCH = 2
+
+
+def _setup(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg, model, params = _setup(arch)
+    batch = materialize_batch(cfg, "train_4k", SMOKE_SEQ, SMOKE_BATCH, None)
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+    assert np.isfinite(float(loss)), (arch, float(loss))
+    gnorms = [float(jnp.linalg.norm(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)]
+    assert all(np.isfinite(g) for g in gnorms), arch
+    assert any(g > 0 for g in gnorms), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_then_decode_smoke(arch):
+    cfg, model, params = _setup(arch)
+    ok, why = applicable(cfg, "decode_32k")
+    if not ok:
+        pytest.skip(why)
+    # prefill SMOKE_SEQ-1 tokens into a cache of capacity SMOKE_SEQ
+    cache_specs = cache_specs_for(cfg, "decode_32k", seq=SMOKE_SEQ, batch=SMOKE_BATCH)
+    cache = init_params(cache_specs, jax.random.PRNGKey(1))
+    pre_batch = materialize_batch(cfg, "prefill_32k", SMOKE_SEQ - 16, SMOKE_BATCH, None)
+    logits, cache = jax.jit(model.prefill)(params, pre_batch, cache)
+    assert logits.shape[0] == SMOKE_BATCH and logits.shape[1] == 1
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+
+    dec_batch = {
+        "token": jnp.ones((SMOKE_BATCH, 1), jnp.int32),
+        "pos": jnp.asarray(SMOKE_SEQ - 16, jnp.int32),
+    }
+    logits2, cache2 = jax.jit(model.decode)(params, dec_batch, cache)
+    assert logits2.shape == (SMOKE_BATCH, 1, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits2.astype(jnp.float32)).all()), arch
+
+
+@pytest.mark.parametrize("arch", ["xlstm_125m", "zamba2_2_7b", "tinyllama_1_1b", "seamless_m4t_v2"])
+def test_decode_consistency_with_full_forward(arch):
+    """Prefill+decode logits must match the full-sequence forward."""
+    cfg, model, params = _setup(arch)
+    S = 24
+    batch = materialize_batch(cfg, "train_4k", S, SMOKE_BATCH, None)
+    tokens = batch["tokens"]  # (B, S+1)
+
+    # full forward on S tokens -> logits at last position
+    cache_specs = cache_specs_for(cfg, "decode_32k", seq=S + 8, batch=SMOKE_BATCH)
+    cache = init_params(cache_specs, jax.random.PRNGKey(1))
+    pre = dict(batch)
+    pre["tokens"] = tokens[:, :S]
+    full_logits, cache = jax.jit(model.prefill)(params, pre, cache)
+
+    # same via prefill of S-1 then one decode step
+    cache2 = init_params(cache_specs, jax.random.PRNGKey(1))
+    pre2 = dict(batch)
+    pre2["tokens"] = tokens[:, : S - 1]
+    _, cache2 = jax.jit(model.prefill)(params, pre2, cache2)
+    dec = {"token": tokens[:, S - 1 : S], "pos": jnp.asarray(S - 1, jnp.int32)}
+    step_logits, _ = jax.jit(model.decode)(params, dec, cache2)
+
+    np.testing.assert_allclose(
+        np.asarray(full_logits[:, 0].astype(jnp.float32)),
+        np.asarray(step_logits[:, 0].astype(jnp.float32)),
+        rtol=2e-3,
+        atol=2e-3,
+    )
+
+
+def test_param_counts_full_configs():
+    """Full-config parameter counts are in the right ballpark (sanity that
+    the configs encode the intended architectures)."""
+    from repro.models.common import n_params
+
+    expect = {  # total params, ±35% (vocab padding, simplifications)
+        "phi3_5_moe": 42e9,
+        "granite_moe": 1.3e9,
+        "qwen1_5_0_5b": 0.62e9,
+        "minitron_8b": 8e9,
+        "internlm2_20b": 20e9,
+        "tinyllama_1_1b": 1.1e9,
+        "xlstm_125m": 0.125e9,
+        "zamba2_2_7b": 2.7e9,
+        "internvl2_26b": 20e9,  # LM backbone only (vision stubbed)
+        "seamless_m4t_v2": 1.4e9,
+    }
+    for arch, want in expect.items():
+        cfg = get_config(arch)
+        n = n_params(build_model(cfg).param_specs())
+        assert 0.6 * want < n < 1.6 * want, (arch, n, want)
