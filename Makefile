@@ -1,0 +1,21 @@
+# One entry point for the builder, CI, and future PRs.
+#
+#   make test         - tier-1 verify (ROADMAP.md)
+#   make bench-smoke  - paper-figure benchmark at tiny scale (sanity, not numbers)
+#   make mine-smoke   - every CLI-selectable miner on a small synth dataset
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke mine-smoke
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) -c "from benchmarks.bench_paper import run; run(quick=True)"
+
+mine-smoke:
+	for a in hprepost prepost fpgrowth apriori; do \
+		$(PY) -m repro.launch.mine --algo $$a --dataset mushroom --scale 0.05 --min-sup 0.3 --top 3 || exit 1; \
+	done

@@ -51,4 +51,24 @@ def run() -> list[tuple[str, float, str]]:
     out.append(
         (f"nlist_intersect_B{B}_{La}x{Ly}", _time(f, a_pre, a_post, y_pre, y_post, y_cnt), "ref/jnp")
     )
+    out.extend(run_miners())
+    return out
+
+
+def run_miners() -> list[tuple[str, float, str]]:
+    """End-to-end miner micro-bench through the unified front-door: every
+    registered algorithm on one small dense DB, jit-warm via one engine."""
+    from repro.data.synth import load
+    from repro.mining import MineSpec, MiningEngine, list_miners
+
+    rows, n_items = load("mushroom", scale=0.05)
+    engine = MiningEngine()
+    out = []
+    for algo in list_miners():
+        if algo == "bruteforce":  # oracle: exponential candidate BFS, not a benchmark
+            continue
+        spec = MineSpec(algorithm=algo, min_sup=0.35, max_k=4, candidate_unit=32)
+        engine.submit(rows, n_items, spec)  # warm (compile for hprepost)
+        res = engine.submit(rows, n_items, spec)
+        out.append((f"mine_{algo}_mushroom0.05_sup0.35", res.wall_time_s * 1e6, "mining-api"))
     return out

@@ -2,15 +2,15 @@
 
 One run produces both tables (runtime figures 3-6, memory figures 7-10):
 HPrepost (vectorized JAX, this paper) vs PrePost (host N-list baseline) vs
-FP-growth (pointer baseline). Datasets are offline FIMI surrogates matched
-on Table-3 characteristics (see repro/data/synth.py).
+FP-growth (pointer baseline), all through the unified ``repro.mining``
+front-door on one ``MiningEngine`` — so the HPrepost timings are jit-warm
+across the threshold sweep, exactly like repeated production traffic.
+Datasets are offline FIMI surrogates matched on Table-3 characteristics
+(see repro/data/synth.py).
 """
 from __future__ import annotations
 
 import json
-import time
-
-import numpy as np
 
 # dataset -> min-sup fractions (paper sweeps; bounded so CPU finishes)
 SWEEPS = {
@@ -20,53 +20,39 @@ SWEEPS = {
     "kosarak": [0.05, 0.02, 0.01],
 }
 SCALES = {"chess": 1.0, "mushroom": 1.0, "pumsb": 0.1, "kosarak": 0.05}
+ALGOS = ("hprepost", "prepost", "fpgrowth")
 
 
 def run(out_path: str | None = None, quick: bool = False) -> list[dict]:
-    import jax
-    from jax.sharding import AxisType
+    from repro.data.synth import load
+    from repro.mining import MineSpec, MiningEngine
 
-    from repro.core.fpgrowth import mine_fpgrowth
-    from repro.core.hprepost import HPrepostConfig, HPrepostMiner
-    from repro.core.prepost import mine_prepost
-    from repro.data.synth import FIMI_SURROGATES, load
-
-    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    engine = MiningEngine()
     rows_out = []
     sweeps = {k: v[:2] for k, v in SWEEPS.items()} if quick else SWEEPS
     for name, sweeps_v in sweeps.items():
         rows, n_items = load(name, scale=SCALES[name] * (0.3 if quick else 1.0))
-        R = len(rows)
         for frac in sweeps_v:
-            min_count = max(1, int(frac * R))
-            rec = {"dataset": name, "min_sup": frac, "rows": R, "min_count": min_count}
+            spec = MineSpec(min_sup=frac, max_k=5)
+            rec = {"dataset": name, "min_sup": frac, "rows": len(rows),
+                   "min_count": spec.resolve(len(rows))}
 
-            miner = HPrepostMiner(mesh, config=HPrepostConfig(max_k=5))
-            t0 = time.perf_counter()
-            res_h = miner.mine(rows, n_items, min_count)
-            rec["hprepost_s"] = time.perf_counter() - t0
-            rec["hprepost_bytes"] = res_h.peak_bytes
-            rec["n_itemsets"] = res_h.total_count
+            results = {}
+            for algo in ALGOS:
+                res = engine.submit(rows, n_items, spec.with_(algorithm=algo))
+                results[algo] = res
+                rec[f"{algo}_s"] = res.wall_time_s
+                rec[f"{algo}_bytes"] = res.peak_bytes
 
-            t0 = time.perf_counter()
-            res_p = mine_prepost(rows, n_items, min_count, max_k=5)
-            rec["prepost_s"] = time.perf_counter() - t0
-            rec["prepost_bytes"] = res_p.peak_bytes
-            assert res_p.itemsets == res_h.itemsets, (name, frac)
-
-            t0 = time.perf_counter()
-            res_f, stats = mine_fpgrowth(rows, n_items, min_count)
-            rec["fpgrowth_s"] = time.perf_counter() - t0
-            rec["fpgrowth_bytes"] = stats["peak_bytes"]
-            # fp-growth has no max_k; compare on the overlap
-            short = {k: v for k, v in res_f.items() if len(k) <= 5}
-            assert short == res_p.itemsets, (name, frac)
+            rec["n_itemsets"] = results["hprepost"].total_count
+            ref = results["prepost"].itemsets
+            for algo in ALGOS:
+                assert results[algo].itemsets == ref, (name, frac, algo)
 
             rows_out.append(rec)
             print(
                 f"{name} sup={frac:.2f} n={rec['n_itemsets']}: "
-                f"hprepost {rec['hprepost_s']:.2f}s | prepost {rec['prepost_s']:.2f}s | "
-                f"fpgrowth {rec['fpgrowth_s']:.2f}s"
+                + " | ".join(f"{a} {rec[f'{a}_s']:.2f}s" for a in ALGOS)
             )
     if out_path:
         with open(out_path, "w") as f:

@@ -18,20 +18,21 @@ _WORKER = textwrap.dedent(
     """
     import os, sys, json, time
     os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
-    import numpy as np, jax
-    from jax.sharding import AxisType
-    from repro.core.hprepost import HPrepostMiner, HPrepostConfig
+    import numpy as np
+    from repro.compat import make_mesh
     from repro.core import encoding as enc
     from repro.core.ppc import build_ppc
     from repro.data.synth import load
+    from repro.mining import MineSpec, MiningEngine
 
     D = int(sys.argv[1])
     rows, n_items = load("kosarak", scale=0.03)
-    mesh = jax.make_mesh((D, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
-    miner = HPrepostMiner(mesh, config=HPrepostConfig(max_k=4))
-    min_count = max(1, int(0.008 * len(rows)))
-    res = miner.mine(rows, n_items, min_count)          # cold (compile)
-    t0 = time.time(); res = miner.mine(rows, n_items, min_count); warm = time.time() - t0
+    engine = MiningEngine(make_mesh((D, 1), ("data", "model")))
+    spec = MineSpec(min_sup=0.008, max_k=4)
+    min_count = spec.resolve(len(rows))
+    engine.submit(rows, n_items, spec)                  # cold (compile)
+    res = engine.submit(rows, n_items, spec)            # warm
+    warm = res.wall_time_s
 
     # per-shard tree size (reducer memory model)
     fl = enc.build_flist(enc.item_support(rows, n_items), min_count)

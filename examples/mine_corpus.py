@@ -5,28 +5,22 @@ n-gram itemsets from the LM training corpus with distributed HPrepost.
 
 The synthetic corpus injects known 4-token phrases; the miner must surface
 them as high-support 4-itemsets — the corpus-statistics workflow (vocabulary
-analysis / data curation) this framework runs between training epochs.
+analysis / data curation) this framework runs between training epochs. Runs
+through a ``MiningEngine`` session, the shape production traffic uses.
 """
-import numpy as np
-import jax
-from jax.sharding import AxisType
-
-from repro.core.hprepost import HPrepostConfig, HPrepostMiner
 from repro.data import corpus
+from repro.mining import MineSpec, MiningEngine
 
 VOCAB = 512
 toks = corpus.token_stream(120_000, VOCAB, seed=3, n_phrases=6, phrase_len=4, phrase_rate=0.2)
 rows = corpus.ngram_transactions(toks, window=8, stride=4)
 print(f"corpus: {len(toks)} tokens -> {len(rows)} window transactions")
 
-mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
-miner = HPrepostMiner(mesh, config=HPrepostConfig(max_k=4))
-min_count = int(0.02 * len(rows))
-res = miner.mine(rows, VOCAB, min_count)
+engine = MiningEngine()  # default 1x1 (data, model) mesh; pass a real mesh to scale
+res = engine.submit(rows, VOCAB, MineSpec(algorithm="hprepost", min_sup=0.02, max_k=4))
 
-four = {k: v for k, v in res.itemsets.items() if len(k) == 4}
-print(f"{res.total_count} frequent itemsets (min_count={min_count}); "
-      f"{len(four)} of size 4 — the injected phrases:")
+four = res.by_size(4)
+print(f"{res.summary()}; {len(four)} of size 4 — the injected phrases:")
 for items, sup in sorted(four.items(), key=lambda kv: -kv[1])[:8]:
     print(f"  {items}: support {sup}")
 assert len(four) >= 4, "expected the injected phrases to be recovered"

@@ -3,28 +3,27 @@
   PYTHONPATH=src python examples/quickstart.py
 
 1. Builds the paper's Table-1 database.
-2. Runs the full HPrepost pipeline (Job-1 count -> F-list -> Job-2 PPC-tree
-   -> N-lists -> mining waves) on a JAX mesh.
-3. Cross-checks against the single-shard PrePost miner and shows the
-   PP-codes from the paper's Fig. 2.
+2. Shows the PPC-tree/N-lists from the paper's Fig. 2.
+3. Mines it through the unified ``repro.mining`` front-door: one MineSpec,
+   every algorithm (the distributed HPrepost contribution and the host
+   baselines), one enriched MineResult each — all cross-checked.
 """
-import jax
-from jax.sharding import AxisType
-
 from repro.core import encoding as enc
-from repro.core.hprepost import HPrepostConfig, HPrepostMiner
 from repro.core.ppc import build_ppc
-from repro.core.prepost import mine_prepost
+from repro.mining import MineSpec, mine
 
 # Paper Table 1 (a=0 b=1 c=2 d=3 e=4 f=5 g=6)
 TX = [[0, 1, 6], [1, 2, 3, 5, 6], [0, 1, 4], [0, 3], [1, 2, 4], [0, 3, 4, 5], [1, 2]]
 NAMES = "abcdefg"
 
 rows = enc.pad_transactions(TX)
-min_count = 3  # min-sup = 0.3 over 7 transactions, paper Example 1
+spec = MineSpec(algorithm="hprepost", min_count=3, candidate_unit=4)
+# paper Example 1: threshold 3 of 7 transactions; a fraction spec resolves
+# to the same count through MineSpec.resolve (the one conversion site).
+assert spec.resolve(len(rows)) == MineSpec(min_sup=3 / 7).resolve(len(rows)) == 3
 
 # --- the PPC-tree + N-lists of Fig. 1/2 --------------------------------
-fl = enc.build_flist(enc.item_support(rows, 7), min_count)
+fl = enc.build_flist(enc.item_support(rows, 7), spec.resolve(len(rows)))
 print("F-list:", [(NAMES[i], int(s)) for i, s in zip(fl.items, fl.supports)])
 urows, w = enc.dedup_rows(enc.rank_encode(rows, fl))
 tree = build_ppc(urows, w)
@@ -33,12 +32,16 @@ for rank, nl in enumerate(tree.nlists(fl.k)):
     codes = " ".join(f"({p},{q}):{c}" for p, q, c in nl)
     print(f"  N-list({item}) = {codes}")
 
-# --- distributed HPrepost on a mesh -------------------------------------
-mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
-miner = HPrepostMiner(mesh, config=HPrepostConfig(candidate_unit=4))
-res = miner.mine(rows, 7, min_count)
-ref = mine_prepost(rows, 7, min_count)
+# --- one front-door, every miner ---------------------------------------
+res = mine(rows, 7, spec)  # the paper's distributed HPrepost
+ref = mine(rows, 7, spec.with_(algorithm="prepost"))  # host baseline
 assert res.itemsets == ref.itemsets
-print("\nfrequent itemsets (HPrepost == PrePost):")
+print(f"\n{res.summary()}")
+print(f"stage times: " + ", ".join(f"{k} {v * 1e3:.1f}ms" for k, v in res.stage_times_s.items()))
+print("frequent itemsets (HPrepost == PrePost):")
 for items, sup in sorted(res.itemsets.items()):
     print(f"  {{{','.join(NAMES[i] for i in items)}}}: {sup}")
+
+# --- derived pattern families (closed/maximal/top-rank-k post-passes) ---
+closed = mine(rows, 7, spec.with_(algorithm="prepost", patterns="closed"))
+print(f"closed itemsets: {len(closed.itemsets)} of {closed.total_count} frequent")

@@ -1,0 +1,100 @@
+"""Version shims over the moving parts of the JAX sharding API.
+
+The codebase targets the modern surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.sharding.get_abstract_mesh``,
+``jax.set_mesh``); older installs (<= 0.4.x) ship the same machinery under
+``jax.experimental.shard_map`` and plain ``jax.make_mesh`` without
+``axis_types``. Everything mesh- or shard_map-shaped in this repo goes
+through these helpers so a single module absorbs the skew.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:  # jax >= 0.5: explicit/auto axis types
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    _AxisType = None
+
+try:
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+except ImportError:  # pragma: no cover
+    _exp_shard_map = None
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types when the install supports them."""
+    if _AxisType is not None:
+        return jax.make_mesh(
+            axis_shapes, axis_names, axis_types=(_AxisType.Auto,) * len(axis_names)
+        )
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def make_mesh_from_spec(spec: str):
+    """e.g. "4x2" -> (data, model); "2x4x2" -> (pod, data, model)."""
+    dims = tuple(int(x) for x in spec.split("x"))
+    axes = ("pod", "data", "model")[-len(dims) :] if len(dims) == 3 else ("data", "model")
+    return make_mesh(dims, axes)
+
+
+def _ambient_physical_mesh():
+    env = jax.interpreters.pxla.thread_resources.env
+    return env.physical_mesh
+
+
+def shard_map(f, *, mesh=None, in_specs, out_specs):
+    """``jax.shard_map`` when present, else the experimental one.
+
+    ``mesh=None`` binds the ambient mesh (``with mesh:`` / ``jax.set_mesh``)
+    on installs whose shard_map cannot infer it.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        if mesh is None:
+            return sm(f, in_specs=in_specs, out_specs=out_specs)
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if _exp_shard_map is None:  # pragma: no cover
+        raise ImportError("no shard_map implementation in this jax install")
+    if mesh is None:
+        mesh = _ambient_physical_mesh()
+        if mesh.empty:
+            raise ValueError("shard_map with mesh=None needs an ambient mesh")
+    # check_rep off: the older replication checker rejects valid programs
+    # (scatter with mode="drop") that the modern one accepts.
+    return _exp_shard_map(f, mesh, in_specs, out_specs, check_rep=False)
+
+
+def pcast(x, axes, *, to):
+    """``jax.lax.pcast`` where it exists. Older shard_map (run with
+    ``check_rep=False``) does not track varying-ness, so the cast is an
+    identity there."""
+    fn = getattr(jax.lax, "pcast", None)
+    if fn is not None:
+        return fn(x, axes, to=to)
+    return x
+
+
+def get_abstract_mesh():
+    """Ambient mesh, or None when no mesh context is active."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        return getter()
+    mesh = _ambient_physical_mesh()
+    return None if mesh.empty else mesh
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return _use_physical_mesh(mesh)
+
+
+@contextlib.contextmanager
+def _use_physical_mesh(mesh):
+    with mesh:
+        yield mesh

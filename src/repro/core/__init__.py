@@ -1,16 +1,38 @@
 """Core of the paper's contribution: N-list frequent-itemset mining.
 
-Public API:
+Public API — mine through the unified front-door:
+
+  - ``repro.mining`` (re-exported here): ``MineSpec`` (one typed request:
+    algorithm, min_sup/min_count, max_k, backend, pattern family),
+    ``mine()`` / ``MiningEngine`` (one-shot vs. resident session), and the
+    ``register_miner`` registry covering hprepost, prepost, prepost+,
+    fpgrowth, apriori, and the brute-force oracle. Every miner returns the
+    same enriched ``MineResult`` (itemsets, exact total count, peak bytes,
+    wall time, per-stage timings).
+
+Building blocks (stable, importable directly):
+
   - encoding: transaction padding, F-list, rank encoding
   - ppc: sort-based PPC-tree (TPU-native construction)
   - nlist: N-list intersection (vectorized subsume test)
   - prepost: single-shard PrePost/PrePost+ miner
   - hprepost: distributed MapReduce miner (shard_map)
   - fpgrowth / apriori / oracle: comparators
+  - patterns: closed / maximal / top-rank-k post-passes
 """
 from repro.core.encoding import PAD, FList, build_flist, item_support, pad_transactions, rank_encode
 from repro.core.ppc import PPCTree, build_ppc
-from repro.core.prepost import MineResult, mine_prepost
+from repro.core.prepost import mine_prepost
+
+_MINING_EXPORTS = (
+    "MineSpec",
+    "MineResult",
+    "MiningEngine",
+    "mine",
+    "get_miner",
+    "list_miners",
+    "register_miner",
+)
 
 __all__ = [
     "PAD",
@@ -21,6 +43,17 @@ __all__ = [
     "rank_encode",
     "PPCTree",
     "build_ppc",
-    "MineResult",
     "mine_prepost",
+    *_MINING_EXPORTS,
 ]
+
+
+def __getattr__(name):
+    # Lazy re-export of the repro.mining surface (PEP 562) — keeps
+    # core importable without pulling the miner registry in, and avoids a
+    # package-init cycle (repro.mining's adapters import repro.core.*).
+    if name in _MINING_EXPORTS:
+        import repro.mining as _mining
+
+        return getattr(_mining, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -20,7 +20,7 @@ def _popcount(x: np.ndarray) -> np.ndarray:
 
 
 def mine_apriori(rows: np.ndarray, n_items: int, min_count: int,
-                 max_itemsets: int = 2_000_000):
+                 max_itemsets: int = 2_000_000, max_k: int | None = None):
     """Frequent itemsets via packed vertical bitmaps. Returns dict ids->sup."""
     supports = enc.item_support(rows, n_items)
     fl = enc.build_flist(supports, min_count)
@@ -47,7 +47,7 @@ def mine_apriori(rows: np.ndarray, n_items: int, min_count: int,
         nxt = []
         for ranks, bits in frontier:
             base = ranks[0]
-            if base == 0:
+            if base == 0 or (max_k is not None and len(ranks) >= max_k):
                 continue
             cand = bitmap[:base] & bits[None, :]
             sups = _popcount(cand).sum(axis=1)

@@ -46,13 +46,15 @@ class _FPTree:
 
 
 def _mine(tree: _FPTree, suffix: tuple, min_count: int, out: dict, item_sup: dict,
-          stats: dict, max_itemsets: int):
+          stats: dict, max_itemsets: int, max_k: int | None = None):
     # items ascending support so conditional trees stay small
     for it in sorted(item_sup, key=lambda i: item_sup[i]):
         if len(out) >= max_itemsets:
             return
         newset = (it,) + suffix
         out[newset] = item_sup[it]
+        if max_k is not None and len(newset) >= max_k:
+            continue
         # build conditional pattern base
         cond = _FPTree()
         cond_sup: dict[int, int] = {}
@@ -78,12 +80,12 @@ def _mine(tree: _FPTree, suffix: tuple, min_count: int, out: dict, item_sup: dic
         stats["peak_nodes"] = max(stats["peak_nodes"], stats["live_nodes"] + cond.n_nodes)
         stats["live_nodes"] += cond.n_nodes
         if cond_sup:
-            _mine(cond, newset, min_count, out, cond_sup, stats, max_itemsets)
+            _mine(cond, newset, min_count, out, cond_sup, stats, max_itemsets, max_k)
         stats["live_nodes"] -= cond.n_nodes
 
 
 def mine_fpgrowth(rows: np.ndarray, n_items: int, min_count: int,
-                  max_itemsets: int = 2_000_000):
+                  max_itemsets: int = 2_000_000, max_k: int | None = None):
     """Returns (itemsets dict in original ids, stats with peak node estimate)."""
     supports = enc.item_support(rows, n_items)
     fl = enc.build_flist(supports, min_count)
@@ -102,7 +104,7 @@ def mine_fpgrowth(rows: np.ndarray, n_items: int, min_count: int,
     old_limit = sys.getrecursionlimit()
     sys.setrecursionlimit(max(old_limit, 10000))
     try:
-        _mine(tree, (), min_count, out_ranks, item_sup, stats, max_itemsets)
+        _mine(tree, (), min_count, out_ranks, item_sup, stats, max_itemsets, max_k)
     finally:
         sys.setrecursionlimit(old_limit)
 

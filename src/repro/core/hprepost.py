@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any
 
 import jax
@@ -36,9 +37,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import encoding as enc
 from repro.core.ppc import build_ppc_jnp
-from repro.core.prepost import MineResult
+from repro.core.prepost import PrepostResult
 from repro.kernels.cooccur.ops import cooccurrence_matrix
 from repro.kernels.histogram.ops import item_histogram
 from repro.kernels.nlist_intersect.ops import nlist_intersect
@@ -93,6 +95,7 @@ class HPrepostMiner:
             if (self.cfg.partition_candidates and self.model_axis)
             else P()
         )
+        self.last_stage_times: dict[str, float] = {}
         self._build_jits()
 
     @property
@@ -115,7 +118,7 @@ class HPrepostMiner:
                 h = item_histogram(block, n_bins=n_items, backend=cfg.backend)
                 return jax.lax.psum(h, da)
 
-            return jax.shard_map(body, mesh=mesh, in_specs=P(da, None), out_specs=P())(rows)
+            return shard_map(body, mesh=mesh, in_specs=P(da, None), out_specs=P())(rows)
 
         @functools.partial(jax.jit, static_argnames=("max_nodes", "k", "n_items"))
         def job2(rows, lut, *, max_nodes, k, n_items):
@@ -129,7 +132,7 @@ class HPrepostMiner:
                 lens = jax.lax.pmax(lens, da)
                 return ranked[None], item[None], count[None], pre[None], post[None], lens
 
-            return jax.shard_map(
+            return shard_map(
                 functools.partial(body, lut=lut),
                 mesh=mesh,
                 in_specs=P(da, None),
@@ -156,7 +159,7 @@ class HPrepostMiner:
                 packed = packed.at[flat].set(vals, mode="drop")
                 return packed[: k * width].reshape(1, k, width, 3)
 
-            return jax.shard_map(
+            return shard_map(
                 body, mesh=mesh, in_specs=(P(da),) * 4,
                 out_specs=P(da, None, None, None),
             )(item, count, pre, post)
@@ -167,7 +170,7 @@ class HPrepostMiner:
                 C = cooccurrence_matrix(block[0], n_items=k, backend=cfg.backend)
                 return jax.lax.psum(C, da)
 
-            return jax.shard_map(body, mesh=mesh, in_specs=P(da, None), out_specs=P())(rows)
+            return shard_map(body, mesh=mesh, in_specs=P(da, None), out_specs=P())(rows)
 
         @jax.jit
         def wave(packed, prev_state, parent_idx, base_idx, q_idx):
@@ -189,7 +192,7 @@ class HPrepostMiner:
                 sup = jax.lax.psum(new.sum(axis=1), da)
                 return new[None], sup
 
-            return jax.shard_map(
+            return shard_map(
                 body, mesh=mesh,
                 in_specs=(P(da, None, None, None), P(da, *cand_spec, None), cand_spec, cand_spec),
                 out_specs=(P(da, *cand_spec, None), cand_spec),
@@ -211,7 +214,7 @@ class HPrepostMiner:
                 sup = jax.lax.psum(new.sum(axis=1), da)
                 return new[None], sup
 
-            return jax.shard_map(
+            return shard_map(
                 body, mesh=mesh,
                 in_specs=(
                     P(da, None, None, None),
@@ -227,8 +230,21 @@ class HPrepostMiner:
         self._wave, self._wave_local = wave, wave_local
 
     # ---------------------------------------------------------------- driver
-    def mine(self, rows: np.ndarray, n_items: int, min_count: int) -> MineResult:
+    def mine(
+        self,
+        rows: np.ndarray,
+        n_items: int,
+        min_count: int,
+        *,
+        max_k: int | None | type(Ellipsis) = ...,
+    ) -> PrepostResult:
+        """Mine one database. ``max_k=...`` inherits the config's cap; an
+        explicit value overrides it per call (the bound jits are level-cap
+        agnostic, so a warm miner serves any ``max_k``)."""
         cfg = self.cfg
+        max_k = cfg.max_k if max_k is ... else max_k
+        stages = self.last_stage_times = {}
+        t0 = time.perf_counter()
         R0, L = rows.shape
         Rp = (R0 + self.D - 1) // self.D * self.D
         rows_p = np.full((Rp, L), enc.PAD, np.int32)
@@ -237,6 +253,7 @@ class HPrepostMiner:
 
         supports = np.asarray(jax.device_get(self._job1(rows_sharded, n_items=n_items)))
         fl = enc.build_flist(supports, min_count)
+        stages["job1_flist"] = time.perf_counter() - t0
         K = fl.k
         if K > cfg.max_f1:
             raise ValueError(f"|F1|={K} exceeds max_f1={cfg.max_f1}; raise min_count or max_f1")
@@ -244,9 +261,10 @@ class HPrepostMiner:
         itemsets: dict[tuple[int, ...], int] = {}
         for r in range(K):
             itemsets[(int(fl.items[r]),)] = int(fl.supports[r])
-        if K == 0 or cfg.max_k == 1:
-            return MineResult(itemsets, fl.items, len(itemsets), len(itemsets), 0)
+        if K == 0 or max_k == 1:
+            return PrepostResult(itemsets, fl.items, len(itemsets), len(itemsets), 0)
 
+        t0 = time.perf_counter()
         max_nodes = (Rp // self.D) * L
         ranked, item, count, pre, post, lens = self._job2(
             rows_sharded, jnp.asarray(fl.rank_lut()), max_nodes=max_nodes, k=K, n_items=n_items
@@ -254,10 +272,13 @@ class HPrepostMiner:
         w_needed = int(np.asarray(jax.device_get(lens)).max(initial=1))
         W = cfg.nlist_width or _pow2(max(w_needed, 8))
         packed = self._pack(item, count, pre, post, k=K, width=W)
+        stages["job2_ppc_pack"] = time.perf_counter() - t0
 
+        t0 = time.perf_counter()
         C = np.asarray(jax.device_get(self._jobf2(ranked, k=K))) if K > 1 else np.zeros((K, K), np.int64)
         C = np.triu(C, 1)
         pair_ok = (C + C.T) >= min_count
+        stages["f2_scan"] = time.perf_counter() - t0
 
         peak = int(packed.size * 4 // max(self.D, 1))
 
@@ -272,7 +293,8 @@ class HPrepostMiner:
         use_locality = cfg.locality_dispatch
         slots_per_shard = 0  # of the *previous* wave (for locality bucketing)
 
-        while cands and (cfg.max_k is None or level <= cfg.max_k) and len(itemsets) < cfg.max_itemsets:
+        t0 = time.perf_counter()
+        while cands and (max_k is None or level <= max_k) and len(itemsets) < cfg.max_itemsets:
             if level == 2 or not use_locality:
                 Cn = len(cands)
                 Cs = unit * _pow2((Cn + unit * Mb - 1) // (unit * Mb))
@@ -334,4 +356,5 @@ class HPrepostMiner:
             slots_per_shard = Cpad // Mb
             level += 1
 
-        return MineResult(itemsets, fl.items, len(itemsets), len(itemsets), peak)
+        stages["mining_waves"] = time.perf_counter() - t0
+        return PrepostResult(itemsets, fl.items, len(itemsets), len(itemsets), peak)

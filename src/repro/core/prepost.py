@@ -28,8 +28,9 @@ from repro.core.ppc import build_ppc
 
 
 @dataclasses.dataclass
-class MineResult:
-    """Frequent itemsets in original item ids."""
+class PrepostResult:
+    """Low-level miner output (original item ids). The public surface is
+    the enriched ``repro.mining.MineResult``; adapters build it from this."""
 
     itemsets: dict[tuple[int, ...], int]  # explicitly mined itemsets -> support
     flist_items: np.ndarray
@@ -66,7 +67,7 @@ def mine_prepost(
     cpe: bool = False,
     max_k: int | None = None,
     max_itemsets: int = 2_000_000,
-) -> MineResult:
+) -> PrepostResult:
     """Mine all frequent itemsets from a padded (R, L) transaction matrix."""
     supports = enc.item_support(rows, n_items)
     fl = enc.build_flist(supports, min_count)
@@ -88,7 +89,7 @@ def mine_prepost(
         total += m
 
     if K == 0:
-        return MineResult(itemsets, fl.items, 0, 0, peak)
+        return PrepostResult(itemsets, fl.items, 0, 0, peak)
 
     C = cooccurrence(urows, w, K) if K > 1 and max_k != 1 else np.zeros((K, K), np.int64)
     peak += C.nbytes
@@ -140,4 +141,4 @@ def mine_prepost(
             stack_bytes += ccodes.nbytes
         peak = max(peak, static_bytes + C.nbytes + stack_bytes)
 
-    return MineResult(itemsets, fl.items, len(itemsets), total, peak)
+    return PrepostResult(itemsets, fl.items, len(itemsets), total, peak)

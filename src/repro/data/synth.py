@@ -12,6 +12,7 @@ Generators are seeded and deterministic.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -80,7 +81,9 @@ def generate_sparse(spec: DatasetSpec, rng: np.random.Generator, n_tx: int) -> n
 def load(name: str, *, scale: float = 0.25, seed: int = 0) -> tuple[np.ndarray, int]:
     """Return ``(rows, n_items)`` for a FIMI surrogate at ``scale`` of its rows."""
     spec = FIMI_SURROGATES[name]
-    rng = np.random.default_rng(seed + hash(name) % 2**16)
+    # stable per-dataset seed: builtin hash() is salted per process, which
+    # would make "the same dataset" differ between two CLI invocations
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % 2**16)
     n_tx = max(64, int(spec.n_tx * scale))
     if spec.kind == "dense":
         rows = generate_dense(spec, rng, n_tx)

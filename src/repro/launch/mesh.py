@@ -5,21 +5,16 @@ importing this module touches no JAX device state. Single pod: 16×16 = 256
 chips (data, model). Multi-pod: 2×16×16 = 512 chips (pod, data, model) —
 the ``pod`` axis composes with ``data`` for hierarchical gradient
 reduction (reduce-scatter intra-pod, all-reduce across the slow axis).
+
+Mesh construction goes through ``repro.compat`` so the ``AxisType``
+surface skew between JAX versions is absorbed in one place.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh, make_mesh_from_spec  # noqa: F401  (re-export)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
-
-
-def make_mesh_from_spec(spec: str):
-    """e.g. "4x2" -> (data, model); "2x4x2" -> (pod, data, model)."""
-    dims = tuple(int(x) for x in spec.split("x"))
-    axes = ("pod", "data", "model")[-len(dims) :] if len(dims) == 3 else ("data", "model")
-    return jax.make_mesh(dims, axes, axis_types=(AxisType.Auto,) * len(dims))
+    return make_mesh(shape, axes)

@@ -1,36 +1,35 @@
 """Production mining launcher (the paper's pipeline as a CLI).
 
+Any registered miner is selectable; all of them speak MineSpec/MineResult:
+
     PYTHONPATH=src python -m repro.launch.mine --dataset kosarak --min-sup 0.01
+    PYTHONPATH=src python -m repro.launch.mine --algo fpgrowth --dataset chess --min-sup 0.8
     PYTHONPATH=src python -m repro.launch.mine --corpus --vocab 1024 --min-sup 0.02
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import numpy as np
-from jax.sharding import AxisType
-
-from repro.core.hprepost import HPrepostConfig, HPrepostMiner
 from repro.data import corpus, synth
+from repro.mining import MineSpec, MiningEngine, list_miners
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--algo", default="hprepost", choices=list_miners())
     ap.add_argument("--dataset", default=None, choices=[None, *synth.FIMI_SURROGATES])
     ap.add_argument("--corpus", action="store_true", help="mine token n-grams from the LM corpus")
     ap.add_argument("--vocab", type=int, default=1024)
     ap.add_argument("--scale", type=float, default=0.1)
     ap.add_argument("--min-sup", type=float, default=0.01)
     ap.add_argument("--max-k", type=int, default=5)
+    ap.add_argument("--patterns", default="all", choices=["all", "closed", "maximal", "top_rank_k"])
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--top", type=int, default=10)
     args = ap.parse_args(argv)
 
     from repro.launch.mesh import make_mesh_from_spec
 
-    mesh = make_mesh_from_spec(args.mesh)
     if args.corpus:
         toks = corpus.token_stream(200_000, args.vocab, seed=0)
         rows = corpus.ngram_transactions(toks, window=8, stride=4)
@@ -40,19 +39,13 @@ def main(argv=None):
         rows, n_items = synth.load(args.dataset or "mushroom", scale=args.scale)
         name = args.dataset or "mushroom"
 
-    min_count = max(1, int(args.min_sup * len(rows)))
-    miner = HPrepostMiner(
-        mesh,
-        data_axis=("pod", "data") if "pod" in mesh.shape else "data",
-        config=HPrepostConfig(max_k=args.max_k),
+    engine = MiningEngine(make_mesh_from_spec(args.mesh))
+    spec = MineSpec(
+        algorithm=args.algo, min_sup=args.min_sup, max_k=args.max_k, patterns=args.patterns
     )
-    t0 = time.time()
-    res = miner.mine(rows, n_items, min_count)
-    dt = time.time() - t0
-    print(f"{name}: {len(rows)} tx, min_count={min_count} -> "
-          f"{res.total_count} frequent itemsets in {dt:.2f}s")
-    top = sorted(res.itemsets.items(), key=lambda kv: (-len(kv[0]), -kv[1]))[: args.top]
-    for items, sup in top:
+    res = engine.submit(rows, n_items, spec)
+    print(f"{name}: {len(rows)} tx, min_count={res.min_count} -> {res.summary()}")
+    for items, sup in res.top(args.top):
         print(f"  {items}: {sup}")
     return res
 

@@ -1,0 +1,61 @@
+"""repro.mining — the unified front-door to every frequent-itemset miner.
+
+The paper compares a *family* of algorithms (HPrepost vs. PrePost/PrePost+,
+FP-growth, Apriori); this package gives them one typed call surface:
+
+    from repro.mining import MineSpec, mine
+
+    res = mine(rows, n_items, MineSpec(algorithm="hprepost", min_sup=0.3))
+    res.itemsets, res.total_count, res.wall_time_s, res.stage_times_s
+
+    # resident session (warm jit caches across submits):
+    from repro.mining import MiningEngine
+    eng = MiningEngine(mesh)
+    for frac in (0.4, 0.3, 0.2):
+        eng.submit(rows, n_items, MineSpec(min_sup=frac, max_k=5))
+
+Registered algorithms: ``hprepost`` (the paper's distributed miner),
+``prepost`` / ``prepost+``, ``fpgrowth``, ``apriori``, ``bruteforce``
+(test oracle). New miners join via ``@register_miner("name")``.
+"""
+from repro.mining.engine import MineRequest, MiningEngine
+from repro.mining import miners as _miners  # noqa: F401  (populates the registry)
+from repro.mining.miners import default_mesh
+from repro.mining.registry import Miner, get_miner, list_miners, register_miner
+from repro.mining.result import MineResult
+from repro.mining.spec import PATTERN_KINDS, MineSpec
+
+
+_default_engine: MiningEngine | None = None
+
+
+def mine(rows, n_items: int, spec: MineSpec | None = None, **spec_kwargs) -> MineResult:
+    """One-shot front-door: ``mine(rows, n_items, MineSpec(...))`` or
+    ``mine(rows, n_items, algorithm="prepost", min_sup=0.3)``.
+
+    Routed through a process-wide default ``MiningEngine`` so even ad-hoc
+    calls reuse warm jit caches on the default mesh.
+    """
+    global _default_engine
+    if spec is None:
+        spec = MineSpec(**spec_kwargs)
+    elif spec_kwargs:
+        raise TypeError("pass a MineSpec or spec kwargs, not both")
+    if _default_engine is None:
+        _default_engine = MiningEngine()
+    return _default_engine.submit(rows, n_items, spec)
+
+
+__all__ = [
+    "MineSpec",
+    "MineResult",
+    "MineRequest",
+    "Miner",
+    "MiningEngine",
+    "PATTERN_KINDS",
+    "default_mesh",
+    "get_miner",
+    "list_miners",
+    "mine",
+    "register_miner",
+]

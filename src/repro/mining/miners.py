@@ -1,0 +1,203 @@
+"""The registered miners: every algorithm in the paper's comparison, one
+front-door.
+
+Host baselines (prepost, prepost+, fpgrowth, apriori, the brute-force
+oracle) are thin adapters over ``repro.core``; ``hprepost`` wraps the
+distributed ``HPrepostMiner`` and keeps one jit-warm instance per device
+config so repeated mines through the same frontend (or a
+``MiningEngine``) never rebuild the sharded programs.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core import patterns as pat
+from repro.mining.registry import register_miner
+from repro.mining.result import MineResult
+from repro.mining.spec import MineSpec
+
+
+@functools.lru_cache(maxsize=1)
+def default_mesh():
+    """The 1×1 (data, model) mesh used when no mesh is bound explicitly."""
+    from repro.compat import make_mesh
+
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def _select_patterns(itemsets: dict, spec: MineSpec) -> dict:
+    if spec.patterns == "closed":
+        return pat.closed_itemsets(itemsets)
+    if spec.patterns == "maximal":
+        return pat.maximal_itemsets(itemsets)
+    if spec.patterns == "top_rank_k":
+        return pat.top_rank_k(itemsets, spec.rank_k)
+    return itemsets
+
+
+class _MinerBase:
+    """Shared mine() driver: resolve threshold, time the backend, apply the
+    pattern post-pass, assemble the enriched MineResult."""
+
+    name = "?"
+    exhaustive = True
+
+    def __init__(self, mesh=None, data_axis=None, model_axis="model"):
+        # Mesh kwargs are accepted uniformly so engines can construct any
+        # registered miner the same way; host miners simply ignore them.
+        del mesh, data_axis, model_axis
+
+    def _run(self, rows, n_items, min_count, spec):
+        """-> (itemsets, total_count, n_explicit, peak_bytes, stages, flist)."""
+        raise NotImplementedError
+
+    def mine(self, rows, n_items: int, spec: MineSpec) -> MineResult:
+        rows = np.asarray(rows)
+        min_count = spec.resolve(len(rows))
+        if spec.patterns != "all" and not self.exhaustive:
+            raise ValueError(
+                f"patterns={spec.patterns!r} needs the full frequent collection; "
+                f"miner {self.name!r} materializes an implicit (CPE-pruned) subset"
+            )
+        t0 = time.perf_counter()
+        itemsets, total, n_explicit, peak, stages, flist = self._run(
+            rows, n_items, min_count, spec
+        )
+        stages = dict(stages) if stages else {"mine": time.perf_counter() - t0}
+        if spec.patterns != "all":
+            tp = time.perf_counter()
+            itemsets = _select_patterns(itemsets, spec)
+            stages["patterns"] = time.perf_counter() - tp
+        return MineResult(
+            algorithm=self.name,
+            itemsets=itemsets,
+            total_count=total,
+            n_explicit=n_explicit,
+            min_count=min_count,
+            n_rows=len(rows),
+            peak_bytes=int(peak),
+            wall_time_s=time.perf_counter() - t0,
+            stage_times_s=dict(stages),
+            flist_items=flist,
+        )
+
+
+@register_miner("prepost")
+class PrepostFrontend(_MinerBase):
+    """Single-shard PrePost (the paper's §3.3 baseline)."""
+
+    _cpe = False
+    exhaustive = True
+
+    def _run(self, rows, n_items, min_count, spec):
+        from repro.core.prepost import mine_prepost
+
+        res = mine_prepost(
+            rows, n_items, min_count,
+            cpe=self._cpe, max_k=spec.max_k, max_itemsets=spec.max_itemsets,
+        )
+        return (res.itemsets, res.total_count, res.n_explicit, res.peak_bytes,
+                {}, res.flist_items)
+
+
+@register_miner("prepost+")
+class PrepostPlusFrontend(PrepostFrontend):
+    """PrePost+ with Children-Parent-Equivalence pruning: exact
+    ``total_count``, explicit ``itemsets`` are a pruned subset."""
+
+    _cpe = True
+    exhaustive = False
+
+
+@register_miner("fpgrowth")
+class FPGrowthFrontend(_MinerBase):
+    """Pointer FP-tree FP-growth (the paper's main comparator)."""
+
+    def _run(self, rows, n_items, min_count, spec):
+        from repro.core.fpgrowth import mine_fpgrowth
+
+        out, stats = mine_fpgrowth(
+            rows, n_items, min_count, max_itemsets=spec.max_itemsets, max_k=spec.max_k
+        )
+        return out, len(out), len(out), stats["peak_bytes"], {}, None
+
+
+@register_miner("apriori")
+class AprioriFrontend(_MinerBase):
+    """Vertical-bitmap Apriori (the related-work family)."""
+
+    def _run(self, rows, n_items, min_count, spec):
+        from repro.core.apriori import mine_apriori
+
+        out, stats = mine_apriori(
+            rows, n_items, min_count, max_itemsets=spec.max_itemsets, max_k=spec.max_k
+        )
+        return out, len(out), len(out), stats["peak_bytes"], {}, None
+
+
+@register_miner("bruteforce")
+class BruteForceFrontend(_MinerBase):
+    """Transaction-scan oracle — small DBs only; anchors the parity tests."""
+
+    def _run(self, rows, n_items, min_count, spec):
+        from repro.core.oracle import mine_bruteforce
+
+        out = mine_bruteforce(rows, n_items, min_count, max_k=spec.max_k)
+        return out, len(out), len(out), rows.nbytes, {}, None
+
+
+@register_miner("hprepost")
+class HPrepostFrontend(_MinerBase):
+    """The paper's contribution: distributed MapReduce miner on a mesh.
+
+    One ``HPrepostMiner`` (and therefore one set of jitted sharded
+    programs) is kept per device-level config; specs that differ only in
+    threshold / ``max_k`` / patterns reuse it, so a resident frontend
+    serves repeated traffic without recompiling.
+    """
+
+    exhaustive = True
+
+    def __init__(self, mesh=None, data_axis=None, model_axis="model"):
+        self.mesh = mesh if mesh is not None else default_mesh()
+        if data_axis is None:
+            data_axis = ("pod", "data") if "pod" in self.mesh.shape else "data"
+        self.data_axis = data_axis
+        self.model_axis = model_axis if model_axis in getattr(self.mesh, "axis_names", ()) else None
+        self._miners: dict = {}
+        self.miners_built = 0
+
+    def _device_config(self, spec: MineSpec):
+        from repro.core.hprepost import HPrepostConfig
+
+        # max_k deliberately left at its default: it is a per-call driver
+        # knob (passed to mine()), not part of the compiled program.
+        return HPrepostConfig(
+            nlist_width=spec.nlist_width,
+            candidate_unit=spec.candidate_unit,
+            partition_candidates=spec.partition_candidates,
+            backend=spec.backend,
+            max_f1=spec.max_f1,
+            max_itemsets=spec.max_itemsets,
+        )
+
+    def miner_for(self, spec: MineSpec):
+        from repro.core.hprepost import HPrepostMiner
+
+        cfg = self._device_config(spec)
+        miner = self._miners.get(cfg)
+        if miner is None:
+            miner = self._miners[cfg] = HPrepostMiner(
+                self.mesh, data_axis=self.data_axis, model_axis=self.model_axis, config=cfg
+            )
+            self.miners_built += 1
+        return miner
+
+    def _run(self, rows, n_items, min_count, spec):
+        miner = self.miner_for(spec)
+        res = miner.mine(rows, n_items, min_count, max_k=spec.max_k)
+        return (res.itemsets, res.total_count, res.n_explicit, res.peak_bytes,
+                dict(miner.last_stage_times), res.flist_items)

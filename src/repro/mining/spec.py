@@ -1,0 +1,70 @@
+"""MineSpec: the one typed request object every miner accepts.
+
+A spec is frozen and hashable, so engines can key jit-warm miner instances
+on it, and benchmarks can sweep thresholds by ``dataclasses.replace``.
+Threshold is given *either* as a support fraction (``min_sup``, the paper's
+x-axis) or an absolute count (``min_count``); ``resolve(n_rows)`` is the
+single place the fraction-to-count conversion lives.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PATTERN_KINDS = ("all", "closed", "maximal", "top_rank_k")
+
+
+@dataclasses.dataclass(frozen=True)
+class MineSpec:
+    """What to mine, independent of which backend executes it.
+
+    ``algorithm`` names a registered miner (see ``repro.mining.list_miners``).
+    ``patterns`` selects a post-pass over the frequent-itemset dict:
+    ``all`` (raw), ``closed`` / ``maximal`` / ``top_rank_k`` (the NAFCP /
+    MFI / NTK result surfaces from the paper's lineage); ``rank_k`` is the
+    k of ``top_rank_k``. The candidate/width knobs only matter to the
+    distributed hprepost backend; host miners ignore them.
+    """
+
+    algorithm: str = "hprepost"
+    min_sup: float | None = None  # support threshold as a fraction of rows
+    min_count: int | None = None  # ... or as an absolute transaction count
+    max_k: int | None = None  # cap on itemset size (None = unbounded)
+    patterns: str = "all"
+    rank_k: int = 10
+    backend: str = "auto"  # kernel dispatch: auto | pallas | jnp
+    candidate_unit: int = 256  # hprepost: candidate buffers, pow2 multiples
+    nlist_width: int | None = None  # hprepost: static N-list width (None = auto)
+    partition_candidates: bool = True  # hprepost mode B (PFP groups)
+    max_f1: int = 4096  # guard on |F-list|
+    max_itemsets: int = 2_000_000
+
+    def __post_init__(self):
+        if self.min_sup is not None and self.min_count is not None:
+            raise ValueError("MineSpec takes min_sup or min_count, not both")
+        if self.min_sup is not None and not (0.0 < self.min_sup <= 1.0):
+            raise ValueError(f"min_sup must be in (0, 1], got {self.min_sup}")
+        if self.min_count is not None and self.min_count < 1:
+            raise ValueError(f"min_count must be >= 1, got {self.min_count}")
+        if self.patterns not in PATTERN_KINDS:
+            raise ValueError(f"patterns must be one of {PATTERN_KINDS}, got {self.patterns!r}")
+        if self.max_k is not None and self.max_k < 1:
+            raise ValueError(f"max_k must be >= 1, got {self.max_k}")
+        if self.rank_k < 1:
+            raise ValueError(f"rank_k must be >= 1, got {self.rank_k}")
+
+    def resolve(self, n_rows: int) -> int:
+        """Absolute support threshold for a database of ``n_rows`` rows."""
+        if self.min_count is not None:
+            return int(self.min_count)
+        if self.min_sup is None:
+            raise ValueError("MineSpec needs min_sup or min_count to mine")
+        return max(1, int(self.min_sup * n_rows))
+
+    def with_(self, **changes) -> "MineSpec":
+        """``dataclasses.replace`` that also lets a min_sup spec switch to
+        min_count (and vice versa) without tripping the both-set check."""
+        if "min_sup" in changes and "min_count" not in changes:
+            changes["min_count"] = None
+        if "min_count" in changes and "min_sup" not in changes:
+            changes["min_sup"] = None
+        return dataclasses.replace(self, **changes)

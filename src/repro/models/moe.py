@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import get_abstract_mesh, shard_map
 from repro.models.common import ParamSpec
 
 
@@ -43,7 +44,7 @@ def moe_specs(cfg) -> dict:
 
 def _ambient_moe_axes(cfg, batch: int):
     """(data_axes, model_axis) if the ambient mesh supports sharded dispatch."""
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is None or getattr(am, "empty", True):
         return None
     names = getattr(am, "axis_names", ())
@@ -124,7 +125,7 @@ def _moe_sharded(p, x, cfg, data_axes, model_ax, D, M):
         return out.reshape(B_l, S, d), aux
 
     dspec = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body,
         in_specs=(P(dspec, None, None), P(), P("model"), P("model"), P("model")),
         out_specs=(P(dspec, None, None), P()),

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import pcast, shard_map
+
 
 def gpipe_forward(
     layer_fn,
@@ -51,8 +53,8 @@ def gpipe_forward(
 
         n_ticks = n_micro + S - 1
         # initial carries must already be device-varying for the scan
-        buf = jax.lax.pcast(jnp.zeros_like(xs_local[0]), (axis,), to="varying")
-        outs = jax.lax.pcast(jnp.zeros_like(xs_local), (axis,), to="varying")
+        buf = pcast(jnp.zeros_like(xs_local[0]), (axis,), to="varying")
+        outs = pcast(jnp.zeros_like(xs_local), (axis,), to="varying")
 
         def tick(carry, t):
             buf, outs = carry
@@ -80,7 +82,7 @@ def gpipe_forward(
         return outs
 
     pspec = jax.tree.map(lambda _: P(axis), stacked_params)
-    return jax.shard_map(
+    return shard_map(
         stage_body,
         mesh=mesh,
         in_specs=(pspec, P()),

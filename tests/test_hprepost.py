@@ -22,9 +22,9 @@ from repro.data.synth import random_db
 @pytest.fixture(scope="module")
 def mesh11():
     import jax
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
 
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_paper_example_distributed(mesh11, paper_db):
@@ -61,12 +61,12 @@ _SUBPROC = textwrap.dedent(
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np, jax
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
     from repro.core.hprepost import HPrepostMiner, HPrepostConfig
     from repro.core.prepost import mine_prepost
     from repro.data.synth import random_db
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     for seed in range(4):
         rng = np.random.default_rng(seed)
         rows = random_db(rng, 100, 12, 6)
@@ -80,7 +80,7 @@ _SUBPROC = textwrap.dedent(
             assert res.itemsets == ref.itemsets, (seed, mode_b)
 
     # multi-pod style: data over two axes
-    mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(AxisType.Auto,) * 3)
+    mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
     rng = np.random.default_rng(7)
     rows = random_db(rng, 64, 10, 5)
     miner = HPrepostMiner(mesh3, data_axis=("pod", "data"), config=HPrepostConfig(candidate_unit=8))

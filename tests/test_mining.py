@@ -1,6 +1,8 @@
 """Miner correctness: PrePost / PrePost+ / FP-growth / Apriori vs brute force."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.apriori import mine_apriori

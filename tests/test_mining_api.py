@@ -1,0 +1,142 @@
+"""The unified repro.mining front-door: spec resolution, cross-miner
+parity against the oracle, pattern post-passes, and MiningEngine sessions
+reusing warm jit caches."""
+import numpy as np
+import pytest
+
+from repro.data.synth import random_db
+from repro.mining import (
+    MineRequest,
+    MineResult,
+    MineSpec,
+    MiningEngine,
+    get_miner,
+    list_miners,
+    mine,
+)
+
+SMALL = MineSpec(min_count=2, candidate_unit=8)  # fast hprepost buffers
+
+
+def _db(seed=0, n_tx=60, n_items=10):
+    return random_db(np.random.default_rng(seed), n_tx, n_items, 6), n_items
+
+
+# ------------------------------------------------------------------ MineSpec
+def test_spec_resolve_is_the_one_conversion():
+    assert MineSpec(min_sup=0.01).resolve(50) == 1  # floors at 1
+    assert MineSpec(min_sup=0.3).resolve(1000) == 300
+    assert MineSpec(min_count=7).resolve(1000) == 7
+    with pytest.raises(ValueError):
+        MineSpec(min_sup=0.3, min_count=3)
+    with pytest.raises(ValueError):
+        MineSpec(min_sup=1.5)
+    with pytest.raises(ValueError):
+        MineSpec(patterns="nope")
+    with pytest.raises(ValueError):
+        MineSpec().resolve(10)  # no threshold given
+    # with_ switches threshold kinds without tripping the both-set check
+    assert MineSpec(min_count=3).with_(min_sup=0.5).resolve(10) == 5
+
+
+def test_registry_covers_the_paper_family():
+    names = list_miners()
+    for expected in ("hprepost", "prepost", "prepost+", "fpgrowth", "apriori", "bruteforce"):
+        assert expected in names
+    with pytest.raises(KeyError):
+        get_miner("eclat")
+
+
+# ------------------------------------------------------- cross-miner parity
+@pytest.mark.parametrize("algo", list_miners())
+@pytest.mark.parametrize("seed", [0, 1])
+def test_every_miner_matches_oracle(algo, seed):
+    rows, n_items = _db(seed)
+    oracle = mine(rows, n_items, SMALL.with_(algorithm="bruteforce"))
+    res = mine(rows, n_items, SMALL.with_(algorithm=algo))
+    assert isinstance(res, MineResult)
+    assert res.algorithm == algo
+    assert res.min_count == 2 and res.n_rows == len(rows)
+    assert res.total_count == oracle.total_count  # exact count, always
+    assert res.wall_time_s > 0 and res.stage_times_s
+    if get_miner(algo).exhaustive:
+        assert res.itemsets == oracle.itemsets
+    else:  # CPE-pruned: explicit subset, but every support exact
+        assert set(res.itemsets) <= set(oracle.itemsets)
+        for s, sup in res.itemsets.items():
+            assert oracle.itemsets[s] == sup
+
+
+@pytest.mark.parametrize("algo", list_miners())
+def test_every_miner_honors_max_k(algo):
+    rows, n_items = _db(3)
+    res = mine(rows, n_items, SMALL.with_(algorithm=algo, max_k=2))
+    assert res.itemsets and all(len(s) <= 2 for s in res.itemsets)
+    oracle = mine(rows, n_items, SMALL.with_(algorithm="bruteforce", max_k=2))
+    assert res.total_count == oracle.total_count
+
+
+def test_pattern_postpasses_through_front_door(paper_db):
+    rows, n_items = paper_db
+    spec = SMALL.with_(algorithm="prepost", min_count=3)
+    full = mine(rows, n_items, spec)
+    closed = mine(rows, n_items, spec.with_(patterns="closed"))
+    maximal = mine(rows, n_items, spec.with_(patterns="maximal"))
+    top = mine(rows, n_items, spec.with_(patterns="top_rank_k", rank_k=1))
+    assert set(maximal.itemsets) <= set(closed.itemsets) <= set(full.itemsets)
+    assert closed.total_count == full.total_count  # count describes the full family
+    best = max(full.itemsets.values())
+    assert all(v == best for v in top.itemsets.values())
+    assert "patterns" in closed.stage_times_s
+    with pytest.raises(ValueError):  # CPE subset cannot feed a post-pass
+        mine(rows, n_items, spec.with_(algorithm="prepost+", patterns="closed"))
+
+
+# ------------------------------------------------------------ MiningEngine
+def test_engine_submits_reuse_jit_caches(paper_db):
+    rows, n_items = paper_db
+    eng = MiningEngine()
+    spec = MineSpec(algorithm="hprepost", min_count=3, candidate_unit=4)
+    r1 = eng.submit(rows, n_items, spec)
+    fe = eng.frontend("hprepost")
+    miner = fe.miner_for(spec)  # resident instance, not a rebuild
+    jits = [miner._job1, miner._job2, miner._pack, miner._jobf2, miner._wave, miner._wave_local]
+    sizes_warm = [f._cache_size() for f in jits if hasattr(f, "_cache_size")]
+    assert sizes_warm and sum(sizes_warm) > 0  # first submit compiled something
+
+    # same-shape resubmit: same miner, zero new compilation cache entries
+    r2 = eng.submit(rows, n_items, spec)
+    assert [f._cache_size() for f in jits if hasattr(f, "_cache_size")] == sizes_warm
+    assert r1.itemsets == r2.itemsets
+
+    # a threshold change may add entries for new static shapes, but still
+    # rides the same resident miner (no rebuild of the sharded programs)
+    r3 = eng.submit(rows, n_items, spec.with_(min_count=2))
+    assert fe.miner_for(spec.with_(min_count=2)) is miner
+    assert eng.miners_built == 1 and eng.stats["submits"] == 3
+    assert set(r1.itemsets) <= set(r3.itemsets)
+
+
+def test_engine_mixed_batch_and_sweep(paper_db):
+    rows, n_items = paper_db
+    eng = MiningEngine()
+    reqs = [
+        MineRequest(rows, n_items, MineSpec(algorithm="prepost", min_count=3)),
+        MineRequest(rows, n_items, MineSpec(algorithm="fpgrowth", min_count=3)),
+    ]
+    out = eng.submit_many(reqs)
+    assert [r.algorithm for r in out] == ["prepost", "fpgrowth"]
+    assert out[0].itemsets == out[1].itemsets
+
+    sweep = eng.sweep(rows, n_items, MineSpec(algorithm="prepost", min_count=3), [0.9, 0.45])
+    assert sweep[0].min_count == 6 and sweep[1].min_count == 3
+    assert len(sweep[0].itemsets) <= len(sweep[1].itemsets)
+
+
+def test_core_reexports_the_mining_surface():
+    import repro.core as core
+    import repro.mining as mining
+
+    assert core.MineSpec is mining.MineSpec
+    assert core.MineResult is mining.MineResult
+    assert core.mine is mining.mine

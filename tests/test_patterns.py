@@ -1,5 +1,8 @@
 """Closed / maximal / top-rank-k pattern families vs first principles."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.oracle import mine_bruteforce

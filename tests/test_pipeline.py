@@ -9,10 +9,10 @@ _SUBPROC = textwrap.dedent(
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
     from repro.training.pipeline import gpipe_forward
 
-    mesh = jax.make_mesh((4,), ("pipe",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((4,), ("pipe",))
     L, D = 8, 16          # 8 layers over 4 stages
     n_micro, mb = 6, 4
     rng = np.random.default_rng(0)

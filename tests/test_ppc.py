@@ -1,6 +1,8 @@
 """PPC-tree construction: paper example + sort-based vs pointer oracle."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import encoding as enc

@@ -37,16 +37,18 @@ def test_nested_scan_multiplies():
 
 
 def test_collectives_inside_scan_multiplied():
-    from jax.sharding import AxisType, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    from repro.compat import make_mesh, shard_map
+
+    mesh = make_mesh((1,), ("data",))
 
     def f(x, ws):
         def inner(x, ws):
             def body(c, w):
                 return jax.lax.psum(c @ w, "data"), None
             return jax.lax.scan(body, x, ws)[0]
-        return jax.shard_map(inner, mesh=mesh, in_specs=(P(), P()), out_specs=P())(x, ws)
+        return shard_map(inner, mesh=mesh, in_specs=(P(), P()), out_specs=P())(x, ws)
 
     x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     ws = jax.ShapeDtypeStruct((6, 128, 128), jnp.float32)
@@ -76,12 +78,14 @@ def test_bytes_slice_fusion_not_whole_operand():
 
 def test_collective_bytes_text_parser_agrees():
     """The simple text parser (used for reference) sees the same op types."""
-    from jax.sharding import AxisType, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    from repro.compat import make_mesh, shard_map
+
+    mesh = make_mesh((1,), ("data",))
 
     def f(x):
-        return jax.shard_map(
+        return shard_map(
             lambda x: jax.lax.psum(x, "data"),
             mesh=mesh, in_specs=P("data", None), out_specs=P(),
         )(x)

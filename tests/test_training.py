@@ -152,12 +152,12 @@ def test_checkpoint_elastic_reshard(tmp_path):
     """Save on one 'mesh', restore with different shardings (elasticity)."""
     from repro.checkpoint.ckpt import CheckpointManager
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
 
     cm = CheckpointManager(str(tmp_path))
     state = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     cm.save(0, state, extra={"note": "t"})
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     restored, extra = cm.restore(shardings=sh)
     np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(state["w"]))
