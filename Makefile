@@ -1,16 +1,20 @@
 # One entry point for the builder, CI, and future PRs.
 #
 #   make test         - tier-1 verify (ROADMAP.md)
+#   make test-tier1   - same suite, fail-fast off (the target CI calls)
 #   make bench-smoke  - paper-figure benchmark at tiny scale (sanity, not numbers)
 #   make mine-smoke   - every CLI-selectable miner on a small synth dataset
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke mine-smoke
+.PHONY: test test-tier1 bench-smoke mine-smoke
 
 test:
 	$(PY) -m pytest -x -q
+
+test-tier1:
+	$(PY) -m pytest -q
 
 bench-smoke:
 	$(PY) -c "from benchmarks.bench_paper import run; run(quick=True)"

@@ -7,10 +7,13 @@
 3. Mines it through the unified ``repro.mining`` front-door: one MineSpec,
    every algorithm (the distributed HPrepost contribution and the host
    baselines), one enriched MineResult each — all cross-checked.
+4. Runs the paper's experimental surface — a threshold sweep — through the
+   engine's planned path: prepare() once at the loosest threshold,
+   mine_prepared() per threshold.
 """
 from repro.core import encoding as enc
 from repro.core.ppc import build_ppc
-from repro.mining import MineSpec, mine
+from repro.mining import MineSpec, MiningEngine, mine
 
 # Paper Table 1 (a=0 b=1 c=2 d=3 e=4 f=5 g=6)
 TX = [[0, 1, 6], [1, 2, 3, 5, 6], [0, 1, 4], [0, 3], [1, 2, 4], [0, 3, 4, 5], [1, 2]]
@@ -45,3 +48,22 @@ for items, sup in sorted(res.itemsets.items()):
 # --- derived pattern families (closed/maximal/top-rank-k post-passes) ---
 closed = mine(rows, 7, spec.with_(algorithm="prepost", patterns="closed"))
 print(f"closed itemsets: {len(closed.itemsets)} of {closed.total_count} frequent")
+
+# --- the paper's x-axis: a planned threshold sweep -----------------------
+# engine.sweep groups the thresholds over one database: Job 1 (histogram),
+# Job 2 (PPC-tree), the N-list pack, and the F2 scan run ONCE at the
+# loosest threshold; every min_sup is then served from the shared
+# PreparedDB by the k>2 wave loop alone. min_sup resolves with ceiling
+# semantics: an itemset is frequent iff support/n_rows >= min_sup.
+engine = MiningEngine()
+fracs = [4 / 7, 3 / 7, 2 / 7]
+swept = engine.sweep(rows, 7, spec, fracs)
+counters = engine.frontend("hprepost").miner_for(spec).stage_counters
+assert counters["job1"] == counters["job2"] == counters["f2"] == 1
+print(f"\nplanned sweep over min_sup={[f'{f:.2f}' for f in fracs]} "
+      f"(prep ran once, {engine.stats['prepared_mines']} prepared mines):")
+for frac, res in zip(fracs, swept):
+    assert res.itemsets == mine(rows, 7, spec.with_(min_sup=frac)).itemsets
+    tag = " [shared prep]" if res.prep_shared else ""
+    print(f"  min_sup={frac:.2f} (min_count={res.min_count}): "
+          f"{res.total_count} itemsets{tag}")

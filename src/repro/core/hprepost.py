@@ -57,9 +57,55 @@ class HPrepostConfig:
     locality_dispatch: bool = True  # children placed on their parent's shard:
     # the inter-wave shuffle becomes a shard-local gather (zero collectives),
     # at the cost of per-shard padding under skew (§Perf FIM iteration)
+    pipeline_waves: bool = True  # dispatch wave l+1 before blocking on wave
+    # l's supports: host candidate generation overlaps device execution; the
+    # one-wave speculation is sound because support is anti-monotone
     backend: str = "auto"  # kernel dispatch: auto | pallas | jnp
     max_f1: int = 4096  # guard on |F-list| (F2 matrix is K^2)
     max_itemsets: int = 2_000_000
+
+
+@dataclasses.dataclass
+class PreparedDB:
+    """Threshold-floor prepared database: every stage that depends only on
+    the *loosest* threshold of a sweep (Job 1 histogram/F-list, Job 2
+    PPC-tree build, N-list pack, F2 scan), device-resident.
+
+    ``mine_prepared`` serves any ``min_count >= min_count_floor`` from it:
+    the floor F-list is a superset of every tighter F-list, and N-list
+    intersections count exact database supports regardless of which extra
+    items sit in the tree, so tighter thresholds only *filter* — they never
+    need a rebuild.
+    """
+
+    fl: enc.FList  # built at min_count_floor (superset of tighter F-lists)
+    n_items: int
+    n_rows: int  # unpadded R0 the thresholds resolve against
+    min_count_floor: int  # loosest threshold this prep can serve
+    width: int  # static N-list width W (0 when F1-only)
+    packed: Any  # (D, K, W, 3) device N-lists, or None when F1-only
+    singleton_state: Any  # packed[..., 2] — wave-2 bootstrap, or None
+    C: np.ndarray  # (K, K) upper-triangular F2 co-occurrence counts
+    prep_bytes: int  # per-shard footprint: sharded rows + F-list + packed
+    rows_flist_bytes: int  # the threshold-independent part of prep_bytes
+    stage_times: dict[str, float]  # job1_flist / job2_ppc_pack / f2_scan
+    f1_only: bool = False  # True when built with need_waves=False
+
+    def bytes_at(self, min_count: int, n_shards: int) -> int:
+        """Per-shard prep footprint attributable to one threshold: rows +
+        F-list + the N-list prefix of ranks frequent at ``min_count`` (the
+        floor F-list is support-descending, so that prefix is exactly what
+        an independent mine at this threshold would pack). Keeps the
+        paper's memory-vs-min_sup figures threshold-dependent instead of
+        flat at the sweep's loosest value."""
+        packed_part = 0
+        if self.packed is not None:
+            packed_part = int(self.k_active(min_count) * self.width * 3 * 4 // max(n_shards, 1))
+        return self.rows_flist_bytes + packed_part
+
+    def k_active(self, min_count: int) -> int:
+        """|F1| at ``min_count`` — a prefix length of the floor F-list."""
+        return int(np.count_nonzero(np.asarray(self.fl.supports) >= min_count))
 
 
 def _pow2(n: int) -> int:
@@ -96,6 +142,11 @@ class HPrepostMiner:
             else P()
         )
         self.last_stage_times: dict[str, float] = {}
+        # how many times each device stage ran over this miner's lifetime —
+        # the engine's shared-prep planning is asserted against these
+        self.stage_counters: dict[str, int] = {
+            "job1": 0, "job2": 0, "pack": 0, "f2": 0, "waves": 0
+        }
         self._build_jits()
 
     @property
@@ -230,20 +281,21 @@ class HPrepostMiner:
         self._wave, self._wave_local = wave, wave_local
 
     # ---------------------------------------------------------------- driver
-    def mine(
-        self,
-        rows: np.ndarray,
-        n_items: int,
-        min_count: int,
-        *,
-        max_k: int | None | type(Ellipsis) = ...,
-    ) -> PrepostResult:
-        """Mine one database. ``max_k=...`` inherits the config's cap; an
-        explicit value overrides it per call (the bound jits are level-cap
-        agnostic, so a warm miner serves any ``max_k``)."""
+    @property
+    def _Mb(self) -> int:
+        return max(self.M, 1) if (self.cfg.partition_candidates and self.model_axis) else 1
+
+    def prepare(
+        self, rows: np.ndarray, n_items: int, min_count_floor: int, *, need_waves: bool = True
+    ) -> PreparedDB:
+        """Run every threshold-floor stage once: Job 1 (histogram/F-list),
+        Job 2 (PPC-tree), N-list pack, F2 scan. The result serves any
+        ``mine_prepared`` at ``min_count >= min_count_floor``.
+
+        ``need_waves=False`` stops after the F-list (for ``max_k == 1``
+        traffic, where the tree/N-lists are never consulted)."""
         cfg = self.cfg
-        max_k = cfg.max_k if max_k is ... else max_k
-        stages = self.last_stage_times = {}
+        stages: dict[str, float] = {}
         t0 = time.perf_counter()
         R0, L = rows.shape
         Rp = (R0 + self.D - 1) // self.D * self.D
@@ -252,109 +304,241 @@ class HPrepostMiner:
         rows_sharded = self._shard(rows_p, P(self._da, None))
 
         supports = np.asarray(jax.device_get(self._job1(rows_sharded, n_items=n_items)))
-        fl = enc.build_flist(supports, min_count)
+        self.stage_counters["job1"] += 1
+        fl = enc.build_flist(supports, min_count_floor)
         stages["job1_flist"] = time.perf_counter() - t0
         K = fl.k
         if K > cfg.max_f1:
             raise ValueError(f"|F1|={K} exceeds max_f1={cfg.max_f1}; raise min_count or max_f1")
 
+        rows_flist_bytes = int(rows_p.nbytes // max(self.D, 1))
+        rows_flist_bytes += int(fl.items.nbytes + fl.supports.nbytes)
+        prep_bytes = rows_flist_bytes
+        stages["job2_ppc_pack"] = 0.0
+        stages["f2_scan"] = 0.0
+        packed = singleton = None
+        C = np.zeros((K, K), np.int64)
+        W = 0
+        if K > 0 and need_waves:
+            t0 = time.perf_counter()
+            max_nodes = (Rp // self.D) * L
+            ranked, item, count, pre, post, lens = self._job2(
+                rows_sharded, jnp.asarray(fl.rank_lut()), max_nodes=max_nodes, k=K, n_items=n_items
+            )
+            self.stage_counters["job2"] += 1
+            w_needed = int(np.asarray(jax.device_get(lens)).max(initial=1))
+            W = cfg.nlist_width or _pow2(max(w_needed, 8))
+            packed = self._pack(item, count, pre, post, k=K, width=W)
+            self.stage_counters["pack"] += 1
+            stages["job2_ppc_pack"] = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            if K > 1:
+                C = np.asarray(jax.device_get(self._jobf2(ranked, k=K)))
+                self.stage_counters["f2"] += 1
+            C = np.triu(C, 1)
+            stages["f2_scan"] = time.perf_counter() - t0
+            prep_bytes += int(packed.size * 4 // max(self.D, 1))
+            # level-2 bootstrap: parents are singletons, prev_state = node
+            # counts (replicated over `model`: the bootstrap take is
+            # collective-free)
+            singleton = packed[:, :, :, 2]
+
+        return PreparedDB(
+            fl=fl, n_items=n_items, n_rows=R0, min_count_floor=int(min_count_floor),
+            width=W, packed=packed, singleton_state=singleton, C=C,
+            prep_bytes=prep_bytes, rows_flist_bytes=rows_flist_bytes,
+            stage_times=stages, f1_only=not need_waves,
+        )
+
+    def _pack_wave(self, cands, level: int, slots_per_shard: int):
+        """Host slot assignment for one wave: candidate i -> device slot.
+
+        -> (parent_arr, base_idx, q_idx, slot_of, Cpad, wave_fn)."""
+        cfg = self.cfg
+        unit = cfg.candidate_unit
+        Mb = self._Mb
+        if level == 2 or not cfg.locality_dispatch:
+            Cn = len(cands)
+            Cs = unit * _pow2((Cn + unit * Mb - 1) // (unit * Mb))
+            Cpad = Cs * Mb
+            slot_of = list(range(Cn))  # candidate i -> global slot i
+            parent_arr = np.zeros(Cpad, np.int32)
+            base_idx = np.zeros(Cpad, np.int32)
+            q_idx = np.zeros(Cpad, np.int32)
+            for i, (ranks, par, q) in enumerate(cands):
+                parent_arr[i] = par
+                base_idx[i] = ranks[1]
+                q_idx[i] = q
+            return parent_arr, base_idx, q_idx, slot_of, Cpad, self._wave
+
+        # locality-aware: bucket children onto their parent's shard
+        buckets: list[list[int]] = [[] for _ in range(Mb)]
+        for i, (_, pslot, _) in enumerate(cands):
+            buckets[min(pslot // slots_per_shard, Mb - 1)].append(i)
+        worst = max(len(b) for b in buckets)
+        Cs = unit * _pow2((worst + unit - 1) // unit)
+        Cpad = Cs * Mb
+        parent_arr = np.zeros(Cpad, np.int32)
+        base_idx = np.zeros(Cpad, np.int32)
+        q_idx = np.zeros(Cpad, np.int32)
+        slot_of = [0] * len(cands)
+        for s, bucket in enumerate(buckets):
+            for j, i in enumerate(bucket):
+                ranks, pslot, q = cands[i]
+                slot = s * Cs + j
+                slot_of[i] = slot
+                parent_arr[slot] = pslot % slots_per_shard  # local row
+                base_idx[slot] = ranks[1]
+                q_idx[slot] = q
+        return parent_arr, base_idx, q_idx, slot_of, Cpad, self._wave_local
+
+    @staticmethod
+    def _extensions(entries, pair_ok):
+        """Candidate generation: extend each ``(ranks, slot)`` with every
+        rank ``q2 < ranks[0]`` whose pairs with all members are frequent."""
+        out: list[tuple[tuple[int, ...], int, int]] = []
+        for ranks, slot in entries:
+            for q2 in range(ranks[0] - 1, -1, -1):
+                if all(pair_ok[q2, p] for p in ranks):
+                    out.append(((q2,) + ranks, slot, q2))
+        return out
+
+    def mine_prepared(
+        self,
+        prepared: PreparedDB,
+        min_count: int,
+        *,
+        max_k: int | None | type(Ellipsis) = ...,
+    ) -> PrepostResult:
+        """The k>2 wave loop only, over a shared ``PreparedDB``. Any
+        ``min_count >= prepared.min_count_floor`` is served exactly: floor
+        structures are supersets, N-list supports are exact DB supports.
+
+        With ``cfg.pipeline_waves`` the loop dispatches wave ``l+1`` before
+        blocking on wave ``l``'s supports, so host candidate generation
+        overlaps device execution. The one wave of speculation is sound:
+        children of candidates that turn out infrequent report supports
+        below ``min_count`` themselves (anti-monotonicity), so they can
+        never be emitted; once the parent wave's supports arrive, the dead
+        branches are pruned from further host enumeration.
+        """
+        cfg = self.cfg
+        max_k = cfg.max_k if max_k is ... else max_k
+        if min_count < prepared.min_count_floor:
+            raise ValueError(
+                f"min_count={min_count} is looser than the PreparedDB floor "
+                f"{prepared.min_count_floor}; re-prepare at the looser threshold"
+            )
+        fl = prepared.fl
+        K = fl.k
+        stages = self.last_stage_times = {
+            "job1_flist": 0.0, "job2_ppc_pack": 0.0, "f2_scan": 0.0, "mining_waves": 0.0
+        }
         itemsets: dict[tuple[int, ...], int] = {}
         for r in range(K):
-            itemsets[(int(fl.items[r]),)] = int(fl.supports[r])
-        if K == 0 or max_k == 1:
-            return PrepostResult(itemsets, fl.items, len(itemsets), len(itemsets), 0)
+            if int(fl.supports[r]) >= min_count:
+                itemsets[(int(fl.items[r]),)] = int(fl.supports[r])
+        # per-threshold views of the shared floor structures: the F-list
+        # prefix and footprint an independent mine at min_count would build
+        # (keeps sweep results threshold-dependent, not flat at the floor)
+        flist_items = fl.items[: prepared.k_active(min_count)]
+        peak = prepared.bytes_at(min_count, self.D)
+        if K == 0 or max_k == 1 or not itemsets:
+            return PrepostResult(itemsets, flist_items, len(itemsets), len(itemsets), peak)
+        if prepared.f1_only:
+            raise ValueError(
+                "PreparedDB was built with need_waves=False (F1 only); "
+                "re-prepare with need_waves=True to mine k >= 2"
+            )
 
-        t0 = time.perf_counter()
-        max_nodes = (Rp // self.D) * L
-        ranked, item, count, pre, post, lens = self._job2(
-            rows_sharded, jnp.asarray(fl.rank_lut()), max_nodes=max_nodes, k=K, n_items=n_items
-        )
-        w_needed = int(np.asarray(jax.device_get(lens)).max(initial=1))
-        W = cfg.nlist_width or _pow2(max(w_needed, 8))
-        packed = self._pack(item, count, pre, post, k=K, width=W)
-        stages["job2_ppc_pack"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        C = np.asarray(jax.device_get(self._jobf2(ranked, k=K))) if K > 1 else np.zeros((K, K), np.int64)
-        C = np.triu(C, 1)
+        C = prepared.C
         pair_ok = (C + C.T) >= min_count
-        stages["f2_scan"] = time.perf_counter() - t0
-
-        peak = int(packed.size * 4 // max(self.D, 1))
-
-        # level 2: parents are singletons; prev_state = the node counts
-        # (replicated over `model`, so the bootstrap take is collective-free)
-        prev_state = packed[:, :, :, 2]
+        packed = prepared.packed
+        prev_state = prepared.singleton_state
         qs, ps = np.nonzero(C >= min_count)
         cands = [((int(q), int(p)), int(p), int(q)) for q, p in zip(qs, ps)]
         level = 2
-        unit = cfg.candidate_unit
-        Mb = max(self.M, 1) if (cfg.partition_candidates and self.model_axis) else 1
-        use_locality = cfg.locality_dispatch
+        Mb = self._Mb
         slots_per_shard = 0  # of the *previous* wave (for locality bucketing)
+        pending = None  # (cands, slot_of, device supports) of the wave in flight
 
         t0 = time.perf_counter()
-        while cands and (max_k is None or level <= max_k) and len(itemsets) < cfg.max_itemsets:
-            if level == 2 or not use_locality:
-                Cn = len(cands)
-                Cs = unit * _pow2((Cn + unit * Mb - 1) // (unit * Mb))
-                Cpad = Cs * Mb
-                slot_of = list(range(Cn))  # candidate i -> global slot i
-                parent_arr = np.zeros(Cpad, np.int32)
-                base_idx = np.zeros(Cpad, np.int32)
-                q_idx = np.zeros(Cpad, np.int32)
-                for i, (ranks, par, q) in enumerate(cands):
-                    parent_arr[i] = par
-                    base_idx[i] = ranks[1]
-                    q_idx[i] = q
-                wave_fn = self._wave
+        while cands or pending is not None:
+            dispatched = None
+            if cands and (max_k is None or level <= max_k) and len(itemsets) < cfg.max_itemsets:
+                parent_arr, base_idx, q_idx, slot_of, Cpad, wave_fn = self._pack_wave(
+                    cands, level, slots_per_shard
+                )
+                new_state, sups = wave_fn(
+                    packed,
+                    prev_state,
+                    self._shard(parent_arr, self._cand_spec),
+                    self._shard(base_idx, self._cand_spec),
+                    self._shard(q_idx, self._cand_spec),
+                )
+                self.stage_counters["waves"] += 1
+                dispatched = (cands, slot_of, sups)
+                peak = max(peak, int(new_state.size * 4 // max(self.D * Mb, 1)))
+                prev_state = new_state
+                slots_per_shard = Cpad // Mb
+                level += 1
+            if not cfg.pipeline_waves and dispatched is not None:
+                pending, dispatched = dispatched, None  # degrade: block right away
+
+            survivors = None
+            surv_entries: list[tuple[tuple[int, ...], int]] = []
+            if pending is not None:
+                pcands, pslot_of, psups = pending
+                psups = np.asarray(jax.device_get(psups))  # blocks on wave l-1
+                survivors = set()
+                for i, (ranks, _, _) in enumerate(pcands):
+                    sup = int(psups[pslot_of[i]])
+                    if sup < min_count:
+                        continue
+                    itemsets[tuple(sorted(int(fl.items[r]) for r in ranks))] = sup
+                    survivors.add(pslot_of[i])
+                    surv_entries.append((ranks, pslot_of[i]))
+                pending = None
+
+            if dispatched is not None:
+                dcands, dslot_of, dsups = dispatched
+                if survivors is not None:
+                    # speculative wave l was enumerated before wave l-1's
+                    # supports arrived; drop children of dead parents from
+                    # further enumeration (their own supports self-filter)
+                    kept = [
+                        (c, s) for c, s in zip(dcands, dslot_of) if c[1] in survivors
+                    ]
+                    dcands = [c for c, _ in kept]
+                    dslot_of = [s for _, s in kept]
+                pending = (dcands, dslot_of, dsups)
+                cands = self._extensions([(c[0], s) for c, s in zip(dcands, dslot_of)], pair_ok)
+            elif survivors is not None and not cfg.pipeline_waves:
+                cands = self._extensions(surv_entries, pair_ok)
             else:
-                # locality-aware: bucket children onto their parent's shard
-                buckets: list[list[int]] = [[] for _ in range(Mb)]
-                for i, (_, pslot, _) in enumerate(cands):
-                    buckets[min(pslot // slots_per_shard, Mb - 1)].append(i)
-                worst = max(len(b) for b in buckets)
-                Cs = unit * _pow2((worst + unit - 1) // unit)
-                Cpad = Cs * Mb
-                parent_arr = np.zeros(Cpad, np.int32)
-                base_idx = np.zeros(Cpad, np.int32)
-                q_idx = np.zeros(Cpad, np.int32)
-                slot_of = [0] * len(cands)
-                for s, bucket in enumerate(buckets):
-                    for j, i in enumerate(bucket):
-                        ranks, pslot, q = cands[i]
-                        slot = s * Cs + j
-                        slot_of[i] = slot
-                        parent_arr[slot] = pslot % slots_per_shard  # local row
-                        base_idx[slot] = ranks[1]
-                        q_idx[slot] = q
-                wave_fn = self._wave_local
-
-            new_state, sups = wave_fn(
-                packed,
-                prev_state,
-                self._shard(parent_arr, self._cand_spec),
-                self._shard(base_idx, self._cand_spec),
-                self._shard(q_idx, self._cand_spec),
-            )
-            sups = np.asarray(jax.device_get(sups))
-            peak = max(peak, int(new_state.size * 4 // max(self.D * Mb, 1)))
-
-            next_cands: list[tuple[tuple[int, ...], int, int]] = []
-            for i, (ranks, _, q) in enumerate(cands):
-                sup = int(sups[slot_of[i]])
-                if sup < min_count:
-                    continue
-                ids = tuple(sorted(int(fl.items[r]) for r in ranks))
-                itemsets[ids] = sup
-                base = ranks[0]
-                for q2 in range(base - 1, -1, -1):
-                    if all(pair_ok[q2, p] for p in ranks):
-                        next_cands.append(((q2,) + ranks, slot_of[i], q2))
-            prev_state = new_state
-            cands = next_cands
-            slots_per_shard = Cpad // Mb
-            level += 1
+                cands = []
 
         stages["mining_waves"] = time.perf_counter() - t0
-        return PrepostResult(itemsets, fl.items, len(itemsets), len(itemsets), peak)
+        return PrepostResult(itemsets, flist_items, len(itemsets), len(itemsets), peak)
+
+    def mine(
+        self,
+        rows: np.ndarray,
+        n_items: int,
+        min_count: int,
+        *,
+        max_k: int | None | type(Ellipsis) = ...,
+    ) -> PrepostResult:
+        """One-shot mine = ``prepare`` at ``min_count`` + ``mine_prepared``.
+        ``max_k=...`` inherits the config's cap; an explicit value overrides
+        it per call (the bound jits are level-cap agnostic, so a warm miner
+        serves any ``max_k``)."""
+        max_k = self.cfg.max_k if max_k is ... else max_k
+        prepared = self.prepare(
+            rows, n_items, min_count, need_waves=max_k is None or max_k > 1
+        )
+        res = self.mine_prepared(prepared, min_count, max_k=max_k)
+        # one-shot path pays its own prep: fold the real stage times back in
+        self.last_stage_times.update(prepared.stage_times)
+        return res

@@ -68,6 +68,28 @@ def _size_of(shapes: list[tuple[str, str]]) -> tuple[int, int]:
     return elems, byts
 
 
+def _operand_shapes(args_text: str, symbols: dict) -> list[tuple[str, str]]:
+    """Shapes of an op's operands, one entry per operand.
+
+    The symbol table is authoritative; the inline type annotation
+    (``f32[16,512,512]{2,1,0} %p``) is only a fallback for refs defined on
+    lines the parser skipped. Counting both — as a naive
+    symbols-plus-findall scan does — double-charges every typed operand,
+    which inflated scanned-slice programs by a whole extra copy of the
+    stacked operand per iteration (caught by tests/test_roofline.py).
+    """
+    shapes: list[tuple[str, str]] = []
+    for m in re.finditer(
+        r"(?:([a-z][a-z0-9]*\[[0-9,]*\])(?:\{[^}]*\})?\s+)?%([\w\.\-]+)", args_text
+    ):
+        ref_shapes = symbols.get(m.group(2))
+        if ref_shapes:
+            shapes += ref_shapes
+        elif m.group(1):
+            shapes += _SHAPE_RE.findall(m.group(1))
+    return shapes
+
+
 @dataclasses.dataclass
 class CompCost:
     flops: float = 0.0
@@ -132,13 +154,11 @@ def parse(hlo: str) -> tuple[dict[str, CompCost], str | None]:
             ):
                 cc.calls.append((callee, 1))
 
-        # ---- operand shapes via symbol table
+        # ---- operand shapes via symbol table (inline types as fallback)
         args_m = re.search(rf"{re.escape(opcode)}\(([^)]*)\)", core) if opcode else None
         operand_shapes: list[tuple[str, str]] = []
         if args_m:
-            for ref in re.findall(r"%([\w\.\-]+)", args_m.group(1)):
-                operand_shapes += symbols.get(ref, [])
-            operand_shapes += _SHAPE_RE.findall(args_m.group(1))  # inline-typed operands
+            operand_shapes = _operand_shapes(args_m.group(1), symbols)
 
         # ---- flops
         if opcode in ("dot", "convolution"):
@@ -245,10 +265,7 @@ def top_contributors(hlo: str, n: int = 15) -> list[tuple[float, str]]:
         if not opcode or opcode in _FREE_OPS:
             continue
         args_m = re.search(rf"{re.escape(opcode)}\(([^)]*)\)", core)
-        operand_shapes = []
-        if args_m:
-            for ref in re.findall(r"%([\w\.\-]+)", args_m.group(1)):
-                operand_shapes += symbols.get(ref, [])
+        operand_shapes = _operand_shapes(args_m.group(1), symbols) if args_m else []
         _, rb = _size_of(res_shapes)
         _, ob = _size_of(operand_shapes)
         src = re.search(r'op_name="([^"]+)"', line)

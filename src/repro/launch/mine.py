@@ -5,6 +5,12 @@ Any registered miner is selectable; all of them speak MineSpec/MineResult:
     PYTHONPATH=src python -m repro.launch.mine --dataset kosarak --min-sup 0.01
     PYTHONPATH=src python -m repro.launch.mine --algo fpgrowth --dataset chess --min-sup 0.8
     PYTHONPATH=src python -m repro.launch.mine --corpus --vocab 1024 --min-sup 0.02
+
+``--sweep`` runs the paper's x-axis (several thresholds over one database)
+through the engine's planned path — prep stages run once at the loosest
+threshold, every threshold is served from the shared PreparedDB:
+
+    PYTHONPATH=src python -m repro.launch.mine --dataset mushroom --sweep 0.4,0.3,0.2
 """
 from __future__ import annotations
 
@@ -22,6 +28,11 @@ def main(argv=None):
     ap.add_argument("--vocab", type=int, default=1024)
     ap.add_argument("--scale", type=float, default=0.1)
     ap.add_argument("--min-sup", type=float, default=0.01)
+    ap.add_argument(
+        "--sweep", default=None, metavar="S1,S2,...",
+        help="comma-separated min-sup thresholds mined as one planned sweep "
+             "(shared prep at the loosest threshold); overrides --min-sup",
+    )
     ap.add_argument("--max-k", type=int, default=5)
     ap.add_argument("--patterns", default="all", choices=["all", "closed", "maximal", "top_rank_k"])
     ap.add_argument("--mesh", default="1x1")
@@ -43,6 +54,16 @@ def main(argv=None):
     spec = MineSpec(
         algorithm=args.algo, min_sup=args.min_sup, max_k=args.max_k, patterns=args.patterns
     )
+    if args.sweep:
+        fracs = [float(s) for s in args.sweep.split(",")]
+        results = engine.sweep(rows, n_items, spec, fracs)
+        plan = (f"shared prep x{engine.stats['prepares']}" if engine.stats["prepares"]
+                else "per-request path")
+        print(f"{name}: {len(rows)} tx, sweep over min_sup={fracs} ({plan})")
+        for frac, res in zip(fracs, results):
+            tag = " [shared prep]" if res.prep_shared else ""
+            print(f"  min_sup={frac:g} -> {res.summary()}{tag}")
+        return results
     res = engine.submit(rows, n_items, spec)
     print(f"{name}: {len(rows)} tx, min_count={res.min_count} -> {res.summary()}")
     for items, sup in res.top(args.top):

@@ -8,11 +8,12 @@ FP-growth, Apriori); this package gives them one typed call surface:
     res = mine(rows, n_items, MineSpec(algorithm="hprepost", min_sup=0.3))
     res.itemsets, res.total_count, res.wall_time_s, res.stage_times_s
 
-    # resident session (warm jit caches across submits):
+    # resident session (warm jit caches across submits); threshold sweeps
+    # are planned — prep stages run once at the loosest threshold and every
+    # min_sup is served from the shared PreparedDB:
     from repro.mining import MiningEngine
     eng = MiningEngine(mesh)
-    for frac in (0.4, 0.3, 0.2):
-        eng.submit(rows, n_items, MineSpec(min_sup=frac, max_k=5))
+    results = eng.sweep(rows, n_items, MineSpec(max_k=5), [0.4, 0.3, 0.2])
 
 Registered algorithms: ``hprepost`` (the paper's distributed miner),
 ``prepost`` / ``prepost+``, ``fpgrowth``, ``apriori``, ``bruteforce``

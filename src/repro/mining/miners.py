@@ -54,18 +54,19 @@ class _MinerBase:
         """-> (itemsets, total_count, n_explicit, peak_bytes, stages, flist)."""
         raise NotImplementedError
 
-    def mine(self, rows, n_items: int, spec: MineSpec) -> MineResult:
-        rows = np.asarray(rows)
-        min_count = spec.resolve(len(rows))
+    def _check_patterns(self, spec: MineSpec):
         if spec.patterns != "all" and not self.exhaustive:
             raise ValueError(
                 f"patterns={spec.patterns!r} needs the full frequent collection; "
                 f"miner {self.name!r} materializes an implicit (CPE-pruned) subset"
             )
-        t0 = time.perf_counter()
-        itemsets, total, n_explicit, peak, stages, flist = self._run(
-            rows, n_items, min_count, spec
-        )
+
+    def _finish(
+        self, itemsets, total, n_explicit, peak, stages, flist,
+        *, spec, min_count, n_rows, t0, prep_shared=False,
+    ) -> MineResult:
+        """Assemble the enriched MineResult (pattern post-pass included) —
+        shared by the one-shot ``mine`` and the engine's shared-prep path."""
         stages = dict(stages) if stages else {"mine": time.perf_counter() - t0}
         if spec.patterns != "all":
             tp = time.perf_counter()
@@ -77,11 +78,25 @@ class _MinerBase:
             total_count=total,
             n_explicit=n_explicit,
             min_count=min_count,
-            n_rows=len(rows),
+            n_rows=n_rows,
             peak_bytes=int(peak),
             wall_time_s=time.perf_counter() - t0,
             stage_times_s=dict(stages),
             flist_items=flist,
+            prep_shared=prep_shared,
+        )
+
+    def mine(self, rows, n_items: int, spec: MineSpec) -> MineResult:
+        rows = np.asarray(rows)
+        min_count = spec.resolve(len(rows))
+        self._check_patterns(spec)
+        t0 = time.perf_counter()
+        itemsets, total, n_explicit, peak, stages, flist = self._run(
+            rows, n_items, min_count, spec
+        )
+        return self._finish(
+            itemsets, total, n_explicit, peak, stages, flist,
+            spec=spec, min_count=min_count, n_rows=len(rows), t0=t0,
         )
 
 
@@ -201,3 +216,40 @@ class HPrepostFrontend(_MinerBase):
         res = miner.mine(rows, n_items, min_count, max_k=spec.max_k)
         return (res.itemsets, res.total_count, res.n_explicit, res.peak_bytes,
                 dict(miner.last_stage_times), res.flist_items)
+
+    # -------------------------------------------------- two-phase (planned)
+    def prepare(self, rows, n_items: int, min_count_floor: int, spec: MineSpec,
+                *, need_waves: bool = True):
+        """Run the threshold-floor stages once -> ``(miner, PreparedDB)``.
+
+        ``spec`` selects the device-level config (and so the resident
+        miner); its own threshold is irrelevant here — every spec in the
+        group whose threshold is at least ``min_count_floor`` can be served
+        by ``mine_prepared`` from the returned PreparedDB."""
+        miner = self.miner_for(spec)
+        return miner, miner.prepare(
+            np.asarray(rows), n_items, min_count_floor, need_waves=need_waves
+        )
+
+    def mine_prepared(self, miner, prepared, spec: MineSpec, *,
+                      prep_stages=None, prep_shared: bool = False,
+                      t0: float | None = None) -> MineResult:
+        """Serve one spec from a shared ``PreparedDB`` (the k>2 waves only).
+
+        ``prep_stages`` folds the real prep times into this result's
+        ``stage_times_s`` — pass it on the one request that paid for prep;
+        the others keep 0.0 prep keys and ``prep_shared=True``."""
+        self._check_patterns(spec)
+        min_count = spec.resolve(prepared.n_rows)
+        if t0 is None:
+            t0 = time.perf_counter()
+        res = miner.mine_prepared(prepared, min_count, max_k=spec.max_k)
+        stages = dict(miner.last_stage_times)
+        if prep_stages:
+            stages.update(prep_stages)
+        return self._finish(
+            res.itemsets, res.total_count, res.n_explicit, res.peak_bytes,
+            stages, res.flist_items,
+            spec=spec, min_count=min_count, n_rows=prepared.n_rows, t0=t0,
+            prep_shared=prep_shared,
+        )

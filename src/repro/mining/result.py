@@ -34,6 +34,12 @@ class MineResult:
     wall_time_s: float  # host-observed end-to-end mining time
     stage_times_s: dict[str, float] = dataclasses.field(default_factory=dict)
     flist_items: np.ndarray | None = None  # F1 items, support-descending
+    # True when prep stages (Job 1/Job 2/pack/F2) were served from a shared
+    # PreparedDB built for another request in the same planned group; the
+    # request that paid for prep carries the real stage times, shared
+    # consumers carry 0.0 for those keys (honest attribution, no double
+    # counting when summing stage times across a sweep).
+    prep_shared: bool = False
 
     def support_of(self, itemset) -> int:
         return self.itemsets[tuple(sorted(int(i) for i in itemset))]

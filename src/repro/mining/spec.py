@@ -9,6 +9,7 @@ single place the fraction-to-count conversion lives.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 PATTERN_KINDS = ("all", "closed", "maximal", "top_rank_k")
 
@@ -53,18 +54,38 @@ class MineSpec:
             raise ValueError(f"rank_k must be >= 1, got {self.rank_k}")
 
     def resolve(self, n_rows: int) -> int:
-        """Absolute support threshold for a database of ``n_rows`` rows."""
+        """Absolute support threshold for a database of ``n_rows`` rows.
+
+        Ceiling semantics: an itemset is frequent iff ``support / n_rows >=
+        min_sup``, i.e. ``support >= ceil(min_sup * n_rows)``. Flooring here
+        would admit itemsets *below* the requested fraction (min_sup=0.25
+        over 10 rows must demand count 3, not 2). The 1e-9 slack keeps exact
+        fractions exact under float noise (``3/7 * 7`` is 3.0000000000000004
+        and must resolve to 3, not 4)."""
         if self.min_count is not None:
             return int(self.min_count)
         if self.min_sup is None:
             raise ValueError("MineSpec needs min_sup or min_count to mine")
-        return max(1, int(self.min_sup * n_rows))
+        return max(1, math.ceil(self.min_sup * n_rows - 1e-9))
 
     def with_(self, **changes) -> "MineSpec":
         """``dataclasses.replace`` that also lets a min_sup spec switch to
-        min_count (and vice versa) without tripping the both-set check."""
-        if "min_sup" in changes and "min_count" not in changes:
+        min_count (and vice versa) without tripping the both-set check.
+
+        Explicitly passing ``min_sup=None`` (or ``min_count=None``) does not
+        silently clear the other kind; a change that would leave a
+        previously-resolvable spec with no threshold at all raises here, at
+        construction, instead of deep inside ``mine()``."""
+        if changes.get("min_sup") is not None and "min_count" not in changes:
             changes["min_count"] = None
-        if "min_count" in changes and "min_sup" not in changes:
+        if changes.get("min_count") is not None and "min_sup" not in changes:
             changes["min_sup"] = None
-        return dataclasses.replace(self, **changes)
+        new = dataclasses.replace(self, **changes)
+        had_threshold = self.min_sup is not None or self.min_count is not None
+        if had_threshold and new.min_sup is None and new.min_count is None:
+            raise ValueError(
+                "with_() cleared the support threshold (min_sup and min_count "
+                "are both None now); set the other threshold kind in the same "
+                "call, e.g. with_(min_sup=None, min_count=3)"
+            )
+        return new

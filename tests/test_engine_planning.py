@@ -1,0 +1,231 @@
+"""Shared-work sweep planning + threshold-semantics regressions.
+
+The engine's ``sweep``/``submit_many`` group hprepost requests by
+(database fingerprint, device config), run Job 1 / Job 2 / pack / F2 once
+at the group's loosest threshold, and serve every threshold from the
+shared ``PreparedDB``. The correctness anchor: planned results are
+itemset-identical to independent ``submit`` calls per threshold.
+"""
+import numpy as np
+import pytest
+
+from repro.core.encoding import pad_transactions
+from repro.data.synth import random_db
+from repro.mining import MineRequest, MineSpec, MiningEngine, list_miners, mine
+
+SPEC = MineSpec(algorithm="hprepost", max_k=5, candidate_unit=8, min_sup=0.5)
+
+
+def _db(seed=0, n_tx=60, n_items=10):
+    return random_db(np.random.default_rng(seed), n_tx, n_items, 6), n_items
+
+
+# ------------------------------------------------------- planned sweeps
+def test_sweep_runs_prep_once_and_matches_independent_mines():
+    rows, n_items = _db()
+    eng = MiningEngine()
+    fracs = [0.4, 0.25, 0.1]
+    sweep = eng.sweep(rows, n_items, SPEC, fracs)
+
+    # the acceptance criterion: one 3-threshold sweep, each prep stage once
+    counters = eng.frontend("hprepost").miner_for(SPEC).stage_counters
+    assert counters["job1"] == 1
+    assert counters["job2"] == 1
+    assert counters["pack"] == 1
+    assert counters["f2"] == 1
+    assert eng.stats["prepares"] == 1 and eng.stats["prepared_mines"] == 3
+    assert eng.miners_built == 1  # one resident device miner served the sweep
+
+    # parity anchor: the planned path == independent mine() per threshold
+    fresh = MiningEngine()
+    for res, frac in zip(sweep, fracs):
+        ind = fresh.submit(rows, n_items, SPEC.with_(min_sup=frac))
+        assert res.itemsets == ind.itemsets
+        assert res.min_count == ind.min_count
+        assert res.total_count == ind.total_count
+
+
+def test_sweep_attributes_shared_prep_honestly():
+    rows, n_items = _db(1)
+    eng = MiningEngine()
+    sweep = eng.sweep(rows, n_items, SPEC, [0.3, 0.2, 0.1])
+    prep_keys = ("job1_flist", "job2_ppc_pack", "f2_scan")
+    payer, shared = sweep[0], sweep[1:]
+    assert not payer.prep_shared
+    assert sum(payer.stage_times_s[k] for k in prep_keys) > 0
+    for res in shared:
+        assert res.prep_shared
+        for k in prep_keys:  # stable keys, zero cost: prep was not re-run
+            assert res.stage_times_s[k] == 0.0
+        assert "mining_waves" in res.stage_times_s
+
+
+def test_submit_many_groups_by_database_content_and_config():
+    rows_a, n_items = _db(0)
+    rows_b, _ = _db(1)
+    eng = MiningEngine()
+    reqs = [
+        MineRequest(rows_a, n_items, SPEC.with_(min_sup=0.3)),
+        MineRequest(rows_b, n_items, SPEC.with_(min_sup=0.3)),  # other db: no group
+        MineRequest(rows_a, n_items, MineSpec(algorithm="prepost", min_sup=0.3)),
+        MineRequest(rows_a, n_items, SPEC.with_(min_sup=0.15)),
+        # same content, different array object: fingerprint still groups it
+        MineRequest(rows_a.copy(), n_items, SPEC.with_(min_sup=0.5)),
+    ]
+    out = eng.submit_many(reqs)
+    assert eng.stats["prepares"] == 1  # only the 3-request rows_a group
+    assert eng.stats["prepared_mines"] == 3
+    assert eng.stats["submits"] == len(reqs)
+
+    fresh = MiningEngine()
+    for i in (0, 1, 3, 4):
+        r = reqs[i]
+        assert out[i].itemsets == fresh.submit(r.rows, r.n_items, r.spec).itemsets
+    assert out[2].itemsets == out[0].itemsets  # prepost agrees with hprepost
+    assert [r.algorithm for r in out] == ["hprepost"] * 2 + ["prepost"] + ["hprepost"] * 2
+
+
+def test_group_of_max_k_one_requests_skips_tree_build():
+    rows, n_items = _db(2)
+    eng = MiningEngine()
+    spec1 = SPEC.with_(max_k=1)
+    out = eng.submit_many([
+        MineRequest(rows, n_items, spec1.with_(min_sup=0.3)),
+        MineRequest(rows, n_items, spec1.with_(min_sup=0.2)),
+    ])
+    counters = eng.frontend("hprepost").miner_for(spec1).stage_counters
+    assert counters["job1"] == 1 and counters["job2"] == 0 and counters["f2"] == 0
+    for res in out:
+        assert res.itemsets and all(len(s) == 1 for s in res.itemsets)
+        assert res.peak_bytes > 0  # real sharded-rows/F-list footprint
+
+
+def test_mine_prepared_rejects_looser_threshold_than_floor():
+    from repro.mining.miners import default_mesh
+    from repro.core.hprepost import HPrepostConfig, HPrepostMiner
+
+    rows, n_items = _db(3)
+    miner = HPrepostMiner(default_mesh(), config=HPrepostConfig(candidate_unit=8))
+    prepared = miner.prepare(rows, n_items, 10)
+    with pytest.raises(ValueError, match="floor"):
+        miner.mine_prepared(prepared, 5)
+
+
+def test_pipelined_waves_match_sequential_loop():
+    from repro.mining.miners import default_mesh
+    from repro.core.hprepost import HPrepostConfig, HPrepostMiner
+
+    mesh = default_mesh()
+    pipelined = HPrepostMiner(mesh, config=HPrepostConfig(candidate_unit=8))
+    sequential = HPrepostMiner(
+        mesh, config=HPrepostConfig(candidate_unit=8, pipeline_waves=False)
+    )
+    for seed in (0, 4):
+        rows, n_items = _db(seed, n_tx=80, n_items=12)
+        a = pipelined.mine(rows, n_items, 2)
+        b = sequential.mine(rows, n_items, 2)
+        assert a.itemsets == b.itemsets
+
+
+# ------------------------------------------- threshold-semantics bugfixes
+def test_resolve_uses_ceiling_semantics():
+    assert MineSpec(min_sup=0.25).resolve(10) == 3  # flooring admitted 0.2 < 0.25
+    assert MineSpec(min_sup=0.3).resolve(1000) == 300  # exact fractions stay exact
+    assert MineSpec(min_sup=3 / 7).resolve(7) == 3  # float noise just above an int
+    assert MineSpec(min_sup=0.5).resolve(7) == 4
+    assert MineSpec(min_sup=1.0).resolve(9) == 9
+    assert MineSpec(min_sup=1e-9).resolve(10) == 1  # still floors at 1
+
+
+@pytest.mark.parametrize("algo", list_miners())
+def test_min_sup_boundary_excluded_across_miners(algo):
+    # 10 rows: item 0 in 2 (fraction 0.2), item 1 in 3 (0.3), item 2 in 7
+    tx = [[0, 1], [0, 1], [1]] + [[2]] * 7
+    rows = pad_transactions(tx)
+    res = mine(rows, 3, MineSpec(algorithm=algo, min_sup=0.25, candidate_unit=8))
+    assert res.min_count == 3  # ceil(0.25 * 10), not int(...) == 2
+    assert (1,) in res.itemsets and (0,) not in res.itemsets
+    assert all(sup / 10 >= 0.25 for sup in res.itemsets.values())
+
+
+def test_with_cannot_silently_clear_the_threshold():
+    spec = MineSpec(min_sup=0.3)
+    with pytest.raises(ValueError, match="threshold"):
+        spec.with_(min_sup=None)
+    with pytest.raises(ValueError, match="threshold"):
+        MineSpec(min_count=3).with_(min_count=None)
+    # switching kinds still works, including the explicit two-key form
+    assert spec.with_(min_count=3).min_sup is None
+    assert spec.with_(min_sup=None, min_count=3).resolve(10) == 3
+    assert MineSpec(min_count=3).with_(min_sup=0.5).resolve(10) == 5
+    # a spec that never had a threshold may keep not having one
+    assert MineSpec().with_(backend="jnp").min_sup is None
+
+
+# --------------------------------------- per-threshold result attribution
+def test_sweep_results_stay_threshold_dependent():
+    rows, n_items = _db()
+    eng = MiningEngine()
+    loose, tight = eng.sweep(rows, n_items, SPEC, [0.15, 0.45])
+    # memory figures must not flatten at the sweep floor: the tight
+    # threshold's footprint is the F-list/N-list prefix it actually uses
+    assert 0 < tight.peak_bytes < loose.peak_bytes
+    # flist_items is the request's own F1, not the shared floor F-list
+    ind = MiningEngine().submit(rows, n_items, SPEC.with_(min_sup=0.45))
+    assert list(tight.flist_items) == list(ind.flist_items)
+    assert len(tight.flist_items) == sum(1 for s in tight.itemsets if len(s) == 1)
+
+
+def test_group_floor_tripping_max_f1_degrades_to_per_request():
+    # items 0-5 in 8/10 rows, items 6-9 in 2/10: the loose threshold's
+    # F-list (K=10) trips max_f1=6, the tight one (K=6) is fine
+    tx = [[0, 1, 2, 3, 4, 5]] * 8 + [[6, 7, 8, 9]] * 2
+    rows = pad_transactions(tx)
+    eng = MiningEngine()
+    spec = SPEC.with_(max_f1=6)
+    ok = eng.submit(rows, 10, spec.with_(min_sup=0.5))
+    assert ok.itemsets
+    # planned prep at the floor would fail the whole group; the engine must
+    # fall back to per-request mining so the error stays per-request
+    with pytest.raises(ValueError, match="max_f1"):
+        eng.sweep(rows, 10, spec, [0.5, 0.2])
+    assert eng.stats["prepares"] == 0  # no shared prep was recorded
+    # a feasible group afterwards still plans normally
+    swept = eng.sweep(rows, 10, spec, [0.5, 0.6])
+    assert eng.stats["prepares"] == 1
+    assert swept[0].itemsets == ok.itemsets
+
+
+def test_f2_counter_only_counts_dispatched_scans():
+    from repro.mining.miners import default_mesh
+    from repro.core.hprepost import HPrepostConfig, HPrepostMiner
+
+    tx = [[0]] * 9 + [[1]]  # exactly one item survives the floor threshold
+    rows = pad_transactions(tx)
+    miner = HPrepostMiner(default_mesh(), config=HPrepostConfig(candidate_unit=8))
+    miner.prepare(rows, 2, 5)
+    assert miner.stage_counters["job1"] == 1
+    assert miner.stage_counters["job2"] == 1
+    assert miner.stage_counters["f2"] == 0  # K == 1: no F2 scan dispatched
+
+
+# ------------------------------------------------- early-return telemetry
+def test_high_threshold_early_return_reports_real_footprint():
+    rows, n_items = _db(5)
+    stage_keys = ("job1_flist", "job2_ppc_pack", "f2_scan", "mining_waves")
+
+    # threshold above every support: |F1| == 0, but memory must not read 0
+    res = mine(rows, n_items, MineSpec(
+        algorithm="hprepost", min_count=len(rows) + 1, candidate_unit=8))
+    assert res.itemsets == {} and res.total_count == 0
+    assert res.peak_bytes > 0
+    for k in stage_keys:
+        assert k in res.stage_times_s
+
+    # max_k == 1 early return: F-list only, same stable keys + real footprint
+    res1 = mine(rows, n_items, MineSpec(
+        algorithm="hprepost", min_sup=0.2, max_k=1, candidate_unit=8))
+    assert res1.itemsets and all(len(s) == 1 for s in res1.itemsets)
+    assert res1.peak_bytes > 0
+    for k in stage_keys:
+        assert k in res1.stage_times_s

@@ -128,8 +128,9 @@ def test_engine_mixed_batch_and_sweep(paper_db):
     assert [r.algorithm for r in out] == ["prepost", "fpgrowth"]
     assert out[0].itemsets == out[1].itemsets
 
-    sweep = eng.sweep(rows, n_items, MineSpec(algorithm="prepost", min_count=3), [0.9, 0.45])
-    assert sweep[0].min_count == 6 and sweep[1].min_count == 3
+    # ceiling threshold semantics: 0.7*7 -> 5, 0.4*7 -> 3 (never below the fraction)
+    sweep = eng.sweep(rows, n_items, MineSpec(algorithm="prepost", min_count=3), [0.7, 0.4])
+    assert sweep[0].min_count == 5 and sweep[1].min_count == 3
     assert len(sweep[0].itemsets) <= len(sweep[1].itemsets)
 
 
