@@ -1,23 +1,31 @@
 # One entry point for the builder, CI, and future PRs.
 #
 #   make test         - tier-1 verify (ROADMAP.md)
-#   make test-tier1   - same suite, fail-fast off (the target CI calls)
+#   make test-tier1   - same suite, fail-fast off (the target CI calls);
+#                       kernel parity (tests/test_kernels.py, incl. the fused
+#                       intersect+support sweeps) runs first for fast signal
 #   make bench-smoke  - paper-figure benchmark at tiny scale (sanity, not numbers)
+#   make bench-json   - emit the BENCH_PR3.json perf trajectory (kernel micro-
+#                       bench + warm-engine miner timings) for future PRs to diff
 #   make mine-smoke   - every CLI-selectable miner on a small synth dataset
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-tier1 bench-smoke mine-smoke
+.PHONY: test test-tier1 bench-smoke bench-json mine-smoke
 
 test:
 	$(PY) -m pytest -x -q
 
 test-tier1:
-	$(PY) -m pytest -q
+	$(PY) -m pytest -q tests/test_kernels.py
+	$(PY) -m pytest -q --ignore=tests/test_kernels.py
 
 bench-smoke:
 	$(PY) -c "from benchmarks.bench_paper import run; run(quick=True)"
+
+bench-json:
+	$(PY) -c "from benchmarks.run import emit_json; print(emit_json())"
 
 mine-smoke:
 	for a in hprepost prepost fpgrowth apriori; do \

@@ -1,7 +1,8 @@
 """Kernel micro-benchmarks: jnp reference path wall-clock on CPU plus the
-interpret-mode parity check. (Real Pallas timings need a TPU; the TPU-side
-performance statement is the roofline of the mask-matmul form — see
-EXPERIMENTS.md §Roofline FIM rows.)"""
+interpret-mode parity check, and the host-side wave-planning throughput
+(vectorized vs. the per-candidate loop baseline it replaced). (Real Pallas
+timings need a TPU; the TPU-side performance statement is the roofline of
+the mask-matmul form — see EXPERIMENTS.md §Roofline FIM rows.)"""
 from __future__ import annotations
 
 import time
@@ -10,14 +11,18 @@ import numpy as np
 
 
 def _time(f, *args, reps=5):
-    f(*args)  # compile
+    """Mean wall time per call in µs. The warmup call is blocked before the
+    timed reps start, so neither compile time nor leftover async dispatch
+    leaks into the first rep; ``jax.block_until_ready`` drains whole result
+    pytrees (the fused kernels return tuples) and is a no-op on host arrays."""
+    import jax
+
+    jax.block_until_ready(f(*args))  # compile + drain dispatch
     t0 = time.perf_counter()
+    r = None
     for _ in range(reps):
         r = f(*args)
-    try:
-        r.block_until_ready()
-    except AttributeError:
-        pass
+    jax.block_until_ready(r)
     return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
@@ -26,7 +31,7 @@ def run() -> list[tuple[str, float, str]]:
 
     from repro.kernels.cooccur.ref import cooccur_ref
     from repro.kernels.histogram.ref import histogram_ref
-    from repro.kernels.nlist_intersect.ref import nlist_intersect_ref
+    from repro.kernels.nlist_intersect.ref import nlist_intersect_fused_ref
     import jax
 
     rng = np.random.default_rng(0)
@@ -47,17 +52,111 @@ def run() -> list[tuple[str, float, str]]:
     y_pre = jnp.asarray(np.sort(rng.integers(0, 1 << 20, (B, Ly)), axis=1), jnp.int32)
     y_post = y_pre - 3
     y_cnt = jnp.ones((B, Ly), jnp.int32)
-    f = jax.jit(nlist_intersect_ref)
+    f = jax.jit(nlist_intersect_fused_ref)  # (merged, supports) in one call
     out.append(
-        (f"nlist_intersect_B{B}_{La}x{Ly}", _time(f, a_pre, a_post, y_pre, y_post, y_cnt), "ref/jnp")
+        (f"nlist_intersect_fused_B{B}_{La}x{Ly}",
+         _time(f, a_pre, a_post, y_pre, y_post, y_cnt), "ref/jnp")
     )
+    out.extend(run_host_planning())
     out.extend(run_miners())
     return out
 
 
+# --------------------------------------------------- host planning baseline
+# The pre-PR-3 per-candidate Python loops, kept here (and only here) as the
+# throughput baseline the vectorized planner is diffed against.
+def _extensions_loop(entries, pair_ok):
+    out = []
+    for ranks, slot in entries:
+        for q2 in range(ranks[0] - 1, -1, -1):
+            if all(pair_ok[q2, p] for p in ranks):
+                out.append(((q2,) + ranks, slot, q2))
+    return out
+
+
+def _pack_wave_loop(miner, cands, level, slots_per_shard):
+    from repro.core.hprepost import _pow2
+
+    cfg = miner.cfg
+    unit = cfg.candidate_unit
+    Mb = miner._Mb
+    if level == 2 or not cfg.locality_dispatch:
+        Cn = len(cands)
+        Cs = unit * _pow2((Cn + unit * Mb - 1) // (unit * Mb))
+        Cpad = Cs * Mb
+        slot_of = list(range(Cn))
+        parent_arr = np.zeros(Cpad, np.int32)
+        base_idx = np.zeros(Cpad, np.int32)
+        q_idx = np.zeros(Cpad, np.int32)
+        for i, (ranks, par, q) in enumerate(cands):
+            parent_arr[i] = par
+            base_idx[i] = ranks[1]
+            q_idx[i] = q
+        return parent_arr, base_idx, q_idx, slot_of, Cpad
+    buckets = [[] for _ in range(Mb)]
+    for i, (_, pslot, _) in enumerate(cands):
+        buckets[min(pslot // slots_per_shard, Mb - 1)].append(i)
+    worst = max(len(b) for b in buckets)
+    Cs = unit * _pow2((worst + unit - 1) // unit)
+    Cpad = Cs * Mb
+    parent_arr = np.zeros(Cpad, np.int32)
+    base_idx = np.zeros(Cpad, np.int32)
+    q_idx = np.zeros(Cpad, np.int32)
+    slot_of = [0] * len(cands)
+    for s, bucket in enumerate(buckets):
+        for j, i in enumerate(bucket):
+            ranks, pslot, q = cands[i]
+            slot = s * Cs + j
+            slot_of[i] = slot
+            parent_arr[slot] = pslot % slots_per_shard
+            base_idx[slot] = ranks[1]
+            q_idx[slot] = q
+    return parent_arr, base_idx, q_idx, slot_of, Cpad
+
+
+def run_host_planning() -> list[tuple[str, float, str]]:
+    """Wave-planning throughput on a >= 10^4-candidate wave: the vectorized
+    ``_extensions`` + ``_pack_wave`` (packbits AND-reduce + argsort slotting)
+    against the per-candidate loop baseline they replaced."""
+    from repro.core.hprepost import HPrepostConfig, HPrepostMiner
+    from repro.mining.miners import default_mesh
+
+    rng = np.random.default_rng(3)
+    K, min_count = 160, 2
+    C = np.triu(rng.integers(0, 4, (K, K)), 1)  # ~half of all pairs frequent
+    pair_ok = (C + C.T) >= min_count
+    pair_packed = np.packbits(pair_ok, axis=1)
+    prefix_packed = np.packbits(np.tri(K, K, -1, dtype=bool), axis=1)
+    qs, ps = np.nonzero(C >= min_count)
+    ranks2 = np.stack([qs, ps], axis=1).astype(np.int32)
+    slots2 = np.arange(len(ranks2), dtype=np.int64)
+    entries2 = [(tuple(r), int(s)) for r, s in zip(ranks2.tolist(), slots2.tolist())]
+
+    miner = HPrepostMiner(default_mesh(), config=HPrepostConfig())
+    sps = 1 << 20  # slots_per_shard for the locality bucketing path
+
+    def plan_vec():
+        r3, s3, q3 = HPrepostMiner._extensions(
+            ranks2, slots2, pair_packed, prefix_packed, K)
+        return miner._pack_wave(r3, s3, q3, 3, sps)
+
+    def plan_loop():
+        ext = _extensions_loop(entries2, pair_ok)
+        return _pack_wave_loop(miner, ext, 3, sps)
+
+    n3 = len(HPrepostMiner._extensions(ranks2, slots2, pair_packed, prefix_packed, K)[0])
+    assert n3 >= 10_000, n3  # the acceptance bar: a >= 10^4-candidate wave
+    return [
+        (f"wave_plan_vec_C{n3}", _time(plan_vec, reps=10), "host/vectorized"),
+        (f"wave_plan_loop_C{n3}", _time(plan_loop, reps=3), "host/baseline"),
+    ]
+
+
 def run_miners() -> list[tuple[str, float, str]]:
     """End-to-end miner micro-bench through the unified front-door: every
-    registered algorithm on one small dense DB, jit-warm via one engine."""
+    registered algorithm on one small dense DB, jit-warm via one engine. For
+    hprepost the second submit is a persistent-PreparedDB-cache hit, so the
+    reported time is the pure k>2 wave cost production resubmits pay."""
     from repro.data.synth import load
     from repro.mining import MineSpec, MiningEngine, list_miners
 
@@ -68,7 +167,7 @@ def run_miners() -> list[tuple[str, float, str]]:
         if algo == "bruteforce":  # oracle: exponential candidate BFS, not a benchmark
             continue
         spec = MineSpec(algorithm=algo, min_sup=0.35, max_k=4, candidate_unit=32)
-        engine.submit(rows, n_items, spec)  # warm (compile for hprepost)
+        engine.submit(rows, n_items, spec)  # warm (compile + prep for hprepost)
         res = engine.submit(rows, n_items, spec)
         out.append((f"mine_{algo}_mushroom0.05_sup0.35", res.wall_time_s * 1e6, "mining-api"))
     return out

@@ -18,6 +18,31 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR3.json")
+
+
+def emit_json(path: str = BENCH_JSON, records=None) -> str:
+    """Write the machine-readable perf trajectory: kernel micro-bench rows,
+    the host wave-planning vec-vs-loop comparison, and end-to-end miner
+    timings through one warm ``MiningEngine`` (the hprepost row is a
+    PreparedDB-cache-hit resubmit). Future PRs diff their own emit against
+    this file instead of re-deriving a baseline."""
+    from benchmarks.bench_kernels import run as kernels_run
+
+    if records is None:
+        records = kernels_run()
+    payload = {
+        "schema": "bench-trajectory-v1",
+        "pr": 3,
+        "records": [
+            {"name": name, "us_per_call": round(us, 1), "note": note}
+            for name, us, note in records
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return os.path.abspath(path)
 
 
 def main() -> None:
@@ -42,11 +67,13 @@ def main() -> None:
         print(f"fig7-10_memory_prepost_{tag},0,{r['prepost_bytes']}B")
         print(f"fig7-10_memory_fpgrowth_{tag},0,{r['fpgrowth_bytes']}B")
 
-    # --- kernels
+    # --- kernels (+ the BENCH_PR3.json perf trajectory, from the same run)
     from benchmarks.bench_kernels import run as kernels_run
 
-    for name, us, note in kernels_run():
+    recs = kernels_run()
+    for name, us, note in recs:
         print(f"kernel_{name},{us:.0f},{note}")
+    emit_json(records=recs)
 
     # --- scaling (subprocesses with fake devices)
     if not args.skip_scaling:

@@ -10,6 +10,8 @@
 4. Runs the paper's experimental surface — a threshold sweep — through the
    engine's planned path: prepare() once at the loosest threshold,
    mine_prepared() per threshold.
+5. Shows the persistent PreparedDB cache: ad-hoc submits after the sweep
+   re-run zero prep stages (engine.cache_info() tells the story).
 """
 from repro.core import encoding as enc
 from repro.core.ppc import build_ppc
@@ -67,3 +69,13 @@ for frac, res in zip(fracs, swept):
     tag = " [shared prep]" if res.prep_shared else ""
     print(f"  min_sup={frac:.2f} (min_count={res.min_count}): "
           f"{res.total_count} itemsets{tag}")
+
+# --- persistent PreparedDB cache ----------------------------------------
+# the sweep's PreparedDB stays resident (LRU under prep_cache_bytes), so an
+# ad-hoc submit at any tighter-or-equal threshold re-runs ZERO prep stages:
+adhoc = engine.submit(rows, 7, spec)
+assert adhoc.prep_shared and counters["job1"] == 1  # no prep re-run
+info = engine.cache_info()
+print(f"\ncache after ad-hoc resubmit: {info['hits']} hit(s), "
+      f"{info['misses']} miss(es), {info['entries']} entr(ies), "
+      f"{info['bytes_in_use']}B of {info['byte_budget']}B budget")

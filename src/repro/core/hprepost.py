@@ -53,6 +53,9 @@ class HPrepostConfig:
     max_k: int | None = None
     nlist_width: int | None = None  # static W; None = auto (next pow2 of max)
     candidate_unit: int = 256  # candidate buffers: pow2 multiples of this
+    la_block: int = 512  # intersect kernel: A-codes per tile
+    ly_block: int = 512  # intersect kernel: Y-codes per tile
+    batch_block: int = 8  # intersect kernel: candidates per grid program
     partition_candidates: bool = True  # mode B (PFP groups over `model`)
     locality_dispatch: bool = True  # children placed on their parent's shard:
     # the inter-wave shuffle becomes a shard-local gather (zero collectives),
@@ -237,10 +240,14 @@ class HPrepostMiner:
                 packed, state = packed[0], state[0]  # (K, W, 3), (C_l, W)
                 a = packed[q_idx]
                 y = packed[base_idx]
-                new = nlist_intersect(
-                    a[:, :, 0], a[:, :, 1], y[:, :, 0], y[:, :, 1], state, backend=cfg.backend
+                # fused kernel: per-shard partial supports fall out of the
+                # intersection itself — only the scalar psum leaves the shard
+                new, part = nlist_intersect(
+                    a[:, :, 0], a[:, :, 1], y[:, :, 0], y[:, :, 1], state,
+                    backend=cfg.backend, la_block=cfg.la_block,
+                    ly_block=cfg.ly_block, batch_block=cfg.batch_block,
                 )
-                sup = jax.lax.psum(new.sum(axis=1), da)
+                sup = jax.lax.psum(part, da)
                 return new[None], sup
 
             return shard_map(
@@ -259,10 +266,12 @@ class HPrepostMiner:
                 state = prev[pidx]  # local rows only
                 a = packed[qidx]
                 y = packed[bidx]
-                new = nlist_intersect(
-                    a[:, :, 0], a[:, :, 1], y[:, :, 0], y[:, :, 1], state, backend=cfg.backend
+                new, part = nlist_intersect(
+                    a[:, :, 0], a[:, :, 1], y[:, :, 0], y[:, :, 1], state,
+                    backend=cfg.backend, la_block=cfg.la_block,
+                    ly_block=cfg.ly_block, batch_block=cfg.batch_block,
                 )
-                sup = jax.lax.psum(new.sum(axis=1), da)
+                sup = jax.lax.psum(part, da)
                 return new[None], sup
 
             return shard_map(
@@ -299,6 +308,21 @@ class HPrepostMiner:
         t0 = time.perf_counter()
         R0, L = rows.shape
         Rp = (R0 + self.D - 1) // self.D * self.D
+        # the Pallas intersect kernel accumulates counts in fp32 (exact only
+        # below 2^24); every count it can produce is bounded by the shard's
+        # transaction count, so refuse shards that could silently wrap. The
+        # jnp path is integer-exact — only the Pallas dispatch is guarded.
+        from repro.kernels.nlist_intersect.ops import FP32_EXACT_MAX
+
+        uses_pallas = cfg.backend == "pallas" or (
+            cfg.backend == "auto" and jax.default_backend() == "tpu"
+        )
+        if uses_pallas and Rp // self.D >= FP32_EXACT_MAX:
+            raise ValueError(
+                f"per-shard row count {Rp // self.D} reaches the fp32 exact-"
+                f"integer bound 2^24; shard the database over more devices "
+                f"(D={self.D}) so N-list counts stay exactly representable"
+            )
         rows_p = np.full((Rp, L), enc.PAD, np.int32)
         rows_p[:R0] = rows
         rows_sharded = self._shard(rows_p, P(self._da, None))
@@ -351,58 +375,76 @@ class HPrepostMiner:
             stage_times=stages, f1_only=not need_waves,
         )
 
-    def _pack_wave(self, cands, level: int, slots_per_shard: int):
+    def _pack_wave(self, ranks, parents, qarr, level: int, slots_per_shard: int):
         """Host slot assignment for one wave: candidate i -> device slot.
+
+        Pure array ops — candidate counts reach 10^5+ per wave, and this
+        runs on the serial host rail the pipelined waves overlap with.
+        ``ranks`` is (C, k) ascending rank rows; ``parents`` the previous-
+        wave slots; ``qarr`` the extension ranks.
 
         -> (parent_arr, base_idx, q_idx, slot_of, Cpad, wave_fn)."""
         cfg = self.cfg
         unit = cfg.candidate_unit
         Mb = self._Mb
+        Cn = len(ranks)
+        base = ranks[:, 1].astype(np.int32)
         if level == 2 or not cfg.locality_dispatch:
-            Cn = len(cands)
             Cs = unit * _pow2((Cn + unit * Mb - 1) // (unit * Mb))
             Cpad = Cs * Mb
-            slot_of = list(range(Cn))  # candidate i -> global slot i
+            slot_of = np.arange(Cn, dtype=np.int64)  # candidate i -> slot i
             parent_arr = np.zeros(Cpad, np.int32)
             base_idx = np.zeros(Cpad, np.int32)
             q_idx = np.zeros(Cpad, np.int32)
-            for i, (ranks, par, q) in enumerate(cands):
-                parent_arr[i] = par
-                base_idx[i] = ranks[1]
-                q_idx[i] = q
+            parent_arr[:Cn] = parents
+            base_idx[:Cn] = base
+            q_idx[:Cn] = qarr
             return parent_arr, base_idx, q_idx, slot_of, Cpad, self._wave
 
-        # locality-aware: bucket children onto their parent's shard
-        buckets: list[list[int]] = [[] for _ in range(Mb)]
-        for i, (_, pslot, _) in enumerate(cands):
-            buckets[min(pslot // slots_per_shard, Mb - 1)].append(i)
-        worst = max(len(b) for b in buckets)
+        # locality-aware: bucket children onto their parent's shard; the
+        # stable argsort over bucket ids yields each candidate's rank within
+        # its bucket without any per-candidate loop
+        bucket = np.minimum(parents.astype(np.int64) // slots_per_shard, Mb - 1)
+        counts = np.bincount(bucket, minlength=Mb)
+        worst = int(counts.max())
         Cs = unit * _pow2((worst + unit - 1) // unit)
         Cpad = Cs * Mb
+        order = np.argsort(bucket, kind="stable")
+        starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+        pos = np.empty(Cn, np.int64)
+        pos[order] = np.arange(Cn) - starts[bucket[order]]
+        slot_of = bucket * Cs + pos
         parent_arr = np.zeros(Cpad, np.int32)
         base_idx = np.zeros(Cpad, np.int32)
         q_idx = np.zeros(Cpad, np.int32)
-        slot_of = [0] * len(cands)
-        for s, bucket in enumerate(buckets):
-            for j, i in enumerate(bucket):
-                ranks, pslot, q = cands[i]
-                slot = s * Cs + j
-                slot_of[i] = slot
-                parent_arr[slot] = pslot % slots_per_shard  # local row
-                base_idx[slot] = ranks[1]
-                q_idx[slot] = q
+        parent_arr[slot_of] = parents % slots_per_shard  # local row
+        base_idx[slot_of] = base
+        q_idx[slot_of] = qarr
         return parent_arr, base_idx, q_idx, slot_of, Cpad, self._wave_local
 
     @staticmethod
-    def _extensions(entries, pair_ok):
-        """Candidate generation: extend each ``(ranks, slot)`` with every
-        rank ``q2 < ranks[0]`` whose pairs with all members are frequent."""
-        out: list[tuple[tuple[int, ...], int, int]] = []
-        for ranks, slot in entries:
-            for q2 in range(ranks[0] - 1, -1, -1):
-                if all(pair_ok[q2, p] for p in ranks):
-                    out.append(((q2,) + ranks, slot, q2))
-        return out
+    def _extensions(ranks, slots, pair_packed, prefix_packed, k_items):
+        """Candidate generation: extend each rank row with every rank
+        ``q2 < ranks[0]`` whose pairs with all members are frequent.
+
+        Vectorized over the whole wave: the per-candidate allowed set is the
+        bitwise AND of the gathered bit-packed ``pair_ok`` rows of its
+        members, masked by the packed strict-lower-triangle prefix row of
+        its smallest rank — no per-candidate Python loop.
+
+        -> (ranks', parents', q') with ranks' of width ``ranks.shape[1]+1``."""
+        k = ranks.shape[1]
+        if not len(ranks):
+            return (np.empty((0, k + 1), np.int32), np.empty(0, np.int64),
+                    np.empty(0, np.int32))
+        allowed = np.bitwise_and.reduce(pair_packed[ranks], axis=1)  # (C, Kb)
+        allowed &= prefix_packed[ranks[:, 0]]
+        mask = np.unpackbits(allowed, axis=1, count=k_items).view(bool)
+        cs, q2s = np.nonzero(mask)
+        new_ranks = np.concatenate(
+            [q2s[:, None].astype(np.int32), ranks[cs]], axis=1
+        )
+        return new_ranks, slots[cs], q2s.astype(np.int32)
 
     def mine_prepared(
         self,
@@ -436,13 +478,16 @@ class HPrepostMiner:
             "job1_flist": 0.0, "job2_ppc_pack": 0.0, "f2_scan": 0.0, "mining_waves": 0.0
         }
         itemsets: dict[tuple[int, ...], int] = {}
-        for r in range(K):
-            if int(fl.supports[r]) >= min_count:
-                itemsets[(int(fl.items[r]),)] = int(fl.supports[r])
+        k_act = prepared.k_active(min_count)
+        items_arr = np.asarray(fl.items)
+        for it, s in zip(
+            items_arr[:k_act].tolist(), np.asarray(fl.supports)[:k_act].tolist()
+        ):
+            itemsets[(int(it),)] = int(s)
         # per-threshold views of the shared floor structures: the F-list
         # prefix and footprint an independent mine at min_count would build
         # (keeps sweep results threshold-dependent, not flat at the floor)
-        flist_items = fl.items[: prepared.k_active(min_count)]
+        flist_items = fl.items[:k_act]
         peak = prepared.bytes_at(min_count, self.D)
         if K == 0 or max_k == 1 or not itemsets:
             return PrepostResult(itemsets, flist_items, len(itemsets), len(itemsets), peak)
@@ -454,21 +499,28 @@ class HPrepostMiner:
 
         C = prepared.C
         pair_ok = (C + C.T) >= min_count
+        # bit-packed planning tables for the vectorized _extensions:
+        # pair_packed[r] is pair_ok's row r, prefix_packed[r] the strict
+        # prefix mask {q2 : q2 < r} — both 8 ranks per byte
+        pair_packed = np.packbits(pair_ok, axis=1)
+        prefix_packed = np.packbits(np.tri(K, K, -1, dtype=bool), axis=1)
         packed = prepared.packed
         prev_state = prepared.singleton_state
         qs, ps = np.nonzero(C >= min_count)
-        cands = [((int(q), int(p)), int(p), int(q)) for q, p in zip(qs, ps)]
+        ranks = np.stack([qs, ps], axis=1).astype(np.int32)  # (C, 2) ascending
+        parents = ps.astype(np.int64)  # level-2 parents: singleton rank slots
+        qarr = qs.astype(np.int32)
         level = 2
         Mb = self._Mb
         slots_per_shard = 0  # of the *previous* wave (for locality bucketing)
-        pending = None  # (cands, slot_of, device supports) of the wave in flight
+        pending = None  # (ranks, slot_of, device supports) of the wave in flight
 
         t0 = time.perf_counter()
-        while cands or pending is not None:
+        while len(ranks) or pending is not None:
             dispatched = None
-            if cands and (max_k is None or level <= max_k) and len(itemsets) < cfg.max_itemsets:
+            if len(ranks) and (max_k is None or level <= max_k) and len(itemsets) < cfg.max_itemsets:
                 parent_arr, base_idx, q_idx, slot_of, Cpad, wave_fn = self._pack_wave(
-                    cands, level, slots_per_shard
+                    ranks, parents, qarr, level, slots_per_shard
                 )
                 new_state, sups = wave_fn(
                     packed,
@@ -478,46 +530,53 @@ class HPrepostMiner:
                     self._shard(q_idx, self._cand_spec),
                 )
                 self.stage_counters["waves"] += 1
-                dispatched = (cands, slot_of, sups)
+                dispatched = (ranks, parents, slot_of, sups)
                 peak = max(peak, int(new_state.size * 4 // max(self.D * Mb, 1)))
                 prev_state = new_state
                 slots_per_shard = Cpad // Mb
                 level += 1
             if not cfg.pipeline_waves and dispatched is not None:
-                pending, dispatched = dispatched, None  # degrade: block right away
+                # degrade: block right away (no speculative wave in flight,
+                # so the parent column is never consulted)
+                pending = (dispatched[0], dispatched[2], dispatched[3])
+                dispatched = None
 
-            survivors = None
-            surv_entries: list[tuple[tuple[int, ...], int]] = []
+            surv_mask = None  # boolean over the settled wave's device slots
+            surv_ranks = surv_slots = None
             if pending is not None:
-                pcands, pslot_of, psups = pending
-                psups = np.asarray(jax.device_get(psups))  # blocks on wave l-1
-                survivors = set()
-                for i, (ranks, _, _) in enumerate(pcands):
-                    sup = int(psups[pslot_of[i]])
-                    if sup < min_count:
-                        continue
-                    itemsets[tuple(sorted(int(fl.items[r]) for r in ranks))] = sup
-                    survivors.add(pslot_of[i])
-                    surv_entries.append((ranks, pslot_of[i]))
+                p_ranks, p_slots, p_sups = pending
+                host = np.asarray(jax.device_get(p_sups))  # blocks on wave l-1
+                svals = host[p_slots]
+                keep = svals >= min_count
+                if keep.any():
+                    emit_items = np.sort(items_arr[p_ranks[keep]], axis=1)
+                    for t, s in zip(emit_items.tolist(), svals[keep].tolist()):
+                        itemsets[tuple(t)] = int(s)
+                surv_mask = np.zeros(host.shape[0], bool)
+                surv_mask[p_slots[keep]] = True
+                surv_ranks, surv_slots = p_ranks[keep], p_slots[keep]
                 pending = None
 
             if dispatched is not None:
-                dcands, dslot_of, dsups = dispatched
-                if survivors is not None:
+                d_ranks, d_parents, d_slot_of, d_sups = dispatched
+                if surv_mask is not None:
                     # speculative wave l was enumerated before wave l-1's
                     # supports arrived; drop children of dead parents from
                     # further enumeration (their own supports self-filter)
-                    kept = [
-                        (c, s) for c, s in zip(dcands, dslot_of) if c[1] in survivors
-                    ]
-                    dcands = [c for c, _ in kept]
-                    dslot_of = [s for _, s in kept]
-                pending = (dcands, dslot_of, dsups)
-                cands = self._extensions([(c[0], s) for c, s in zip(dcands, dslot_of)], pair_ok)
-            elif survivors is not None and not cfg.pipeline_waves:
-                cands = self._extensions(surv_entries, pair_ok)
+                    kept = surv_mask[d_parents]
+                    d_ranks, d_slot_of = d_ranks[kept], d_slot_of[kept]
+                pending = (d_ranks, d_slot_of, d_sups)
+                ranks, parents, qarr = self._extensions(
+                    d_ranks, d_slot_of, pair_packed, prefix_packed, K
+                )
+            elif surv_mask is not None and not cfg.pipeline_waves:
+                ranks, parents, qarr = self._extensions(
+                    surv_ranks, surv_slots, pair_packed, prefix_packed, K
+                )
             else:
-                cands = []
+                ranks = np.empty((0, 2), np.int32)
+                parents = np.empty(0, np.int64)
+                qarr = np.empty(0, np.int32)
 
         stages["mining_waves"] = time.perf_counter() - t0
         return PrepostResult(itemsets, flist_items, len(itemsets), len(itemsets), peak)

@@ -1,22 +1,36 @@
-"""Pallas TPU kernel: batched N-list intersection (the paper's Example 2).
+"""Pallas TPU kernel: batched N-list intersection fused with support
+reduction (the paper's Example 2 + the support count that follows it).
 
 For a batch of candidate itemsets, merges the candidate's N-list ``Y``
 (codes of its base item with current counts) into the extension item's
 N-list ``A``: ``out[b, i] = Σ_j y_cnt[b, j] · [a_pre[b, i] < y_pre[b, j]]
-· [a_post[b, i] > y_post[b, j]]``.
+· [a_post[b, i] > y_post[b, j]]``, and — fused in the same pass —
+``support[b] = Σ_i out[b, i]``. Producing the support inside the kernel
+removes the second full HBM read of the merged state that a post-kernel
+``sum(axis=1)`` costs per mining wave.
 
 Hardware adaptation (GPU/CPU -> TPU): the paper's linear merge — and even
 the searchsorted form used on host — is a gather/branch pattern TPUs
 execute poorly. Because each ``y`` has at most one ancestor in ``A``
 (antichain property, see nlist.py), the merge is *equivalent* to a dense
-subsume-mask contraction, which is a matmul: build the ``(La, Ly)`` boolean
-mask in VMEM with two broadcast compares and contract against ``y_cnt`` on
-the MXU. O(La·Ly) arithmetic beats O(Ly·log La) gathers on a systolic
-array by a wide margin at N-list sizes (≤ few thousand codes).
+subsume-mask contraction, which is a matmul: build the boolean mask in
+VMEM with two broadcast compares and contract against ``y_cnt`` on the
+MXU. O(La·Ly) arithmetic beats O(Ly·log La) gathers on a systolic array
+by a wide margin at N-list sizes (≤ few thousand codes).
 
-Grid: (batch, La_blocks, Ly_blocks); the (b, La) output tile accumulates
-over Ly blocks. Counts are fp32 in-kernel (exact below 2^24 — itemset
-supports are bounded by the shard's row count, far below that).
+Fused-output tiling: the grid is (B/bb, La/la, Ly/ly), Ly-major (the last
+grid axis iterates fastest), with ``bb`` candidates per program. Each
+program builds the (bb, la, ly) subsume mask and issues one *stacked*
+MXU contraction — (bb·la, ly) × (ly, bb) — instead of ``bb`` separate
+(la, ly) × (ly, 1) matvecs; the candidate-diagonal block of the result is
+the (bb, la) merged-count tile. The merged tile accumulates across the Ly
+grid axis (revisited output block, consecutive in traversal order); the
+(bb, 1) support tile additionally accumulates across the La axis, so both
+outputs leave one ``pallas_call``.
+
+Counts are fp32 in-kernel: exact for values < 2^24. Itemset supports are
+bounded by the per-shard row count, which ``HPrepostMiner.prepare``
+guards against that bound before any wave is dispatched.
 """
 from __future__ import annotations
 
@@ -27,30 +41,54 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _intersect_kernel(a_pre_ref, a_post_ref, y_pre_ref, y_post_ref, y_cnt_ref, out_ref):
-    lyb = pl.program_id(2)
+def _intersect_kernel(
+    a_pre_ref, a_post_ref, y_pre_ref, y_post_ref, y_cnt_ref, out_ref, sup_ref
+):
+    lab_i = pl.program_id(1)
+    lyb_j = pl.program_id(2)
 
-    @pl.when(lyb == 0)
-    def _init():
+    @pl.when(lyb_j == 0)
+    def _init_out():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    a_pre = a_pre_ref[...]  # (1, la)
-    a_post = a_post_ref[...]  # (1, la)
-    y_pre = y_pre_ref[...]  # (1, ly)
-    y_post = y_post_ref[...]  # (1, ly)
-    y_cnt = y_cnt_ref[...].astype(jnp.float32)  # (1, ly)
+    @pl.when((lab_i == 0) & (lyb_j == 0))
+    def _init_sup():
+        sup_ref[...] = jnp.zeros_like(sup_ref)
 
-    # subsume mask (la, ly): A[i] is an ancestor of Y[j]
-    mask = (a_pre[0, :, None] < y_pre[0, None, :]) & (a_post[0, :, None] > y_post[0, None, :])
-    out_ref[...] += jax.lax.dot_general(
-        mask.astype(jnp.float32),
-        y_cnt[0, :, None],
-        (((1,), (0,)), ((), ())),
+    a_pre = a_pre_ref[...]  # (bb, la)
+    a_post = a_post_ref[...]  # (bb, la)
+    y_pre = y_pre_ref[...]  # (bb, ly)
+    y_post = y_post_ref[...]  # (bb, ly)
+    y_cnt = y_cnt_ref[...].astype(jnp.float32)  # (bb, ly)
+    bb, la = a_pre.shape
+    ly = y_pre.shape[1]
+
+    # subsume mask (bb, la, ly): A[b, i] is an ancestor of Y[b, j]
+    mask = (a_pre[:, :, None] < y_pre[:, None, :]) & (
+        a_post[:, :, None] > y_post[:, None, :]
+    )
+    # stacked contraction (bb·la, ly) × (ly, bb): one MXU matmul per program;
+    # r[b, i, c] = Σ_j mask[b, i, j] · y_cnt[c, j] — only the candidate
+    # diagonal c == b is wanted, and with bb ≤ the MXU's 128 output columns
+    # the cross terms ride along for free where a matvec would idle them.
+    r = jax.lax.dot_general(
+        mask.astype(jnp.float32).reshape(bb * la, ly),
+        y_cnt,
+        (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
-    )[None, :, 0]
+    ).reshape(bb, la, bb)
+    eye = (
+        jax.lax.broadcasted_iota(jnp.int32, (bb, bb), 0)
+        == jax.lax.broadcasted_iota(jnp.int32, (bb, bb), 1)
+    ).astype(jnp.float32)
+    part = jnp.sum(r * eye[:, None, :], axis=2)  # (bb, la)
+    out_ref[...] += part
+    sup_ref[...] += part.sum(axis=1, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("la_block", "ly_block", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("la_block", "ly_block", "batch_block", "interpret")
+)
 def nlist_intersect_pallas(
     a_pre: jnp.ndarray,
     a_post: jnp.ndarray,
@@ -60,40 +98,55 @@ def nlist_intersect_pallas(
     *,
     la_block: int = 512,
     ly_block: int = 512,
+    batch_block: int = 8,
     interpret: bool = False,
-) -> jnp.ndarray:
-    """All inputs (B, La) / (B, Ly) int32; returns merged counts (B, La) int32.
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """All inputs (B, La) / (B, Ly) int32; returns ``(merged, supports)``:
+    merged counts (B, La) int32 plus their row sums (B,) int32, both from
+    the one fused ``pallas_call``.
 
-    Padding convention (nlist.pad_nlist): pre = INT32_MAX, post = -1, cnt = 0.
-    Padded A slots never pass ``a_pre < y_pre``; padded Y slots carry zero
-    count — no extra masks needed.
+    Padding convention (nlist.pad_nlist): pre = INT32_MAX, post = -1,
+    cnt = 0. Padded A slots never pass ``a_pre < y_pre``; padded Y slots
+    carry zero count — no extra masks needed, and the same sentinels pad
+    the batch axis up to a ``batch_block`` multiple.
+
+    Accumulation is fp32 (exact < 2^24): callers must keep every possible
+    count — bounded by the shard's transaction count — below that.
     """
     B, La = a_pre.shape
     _, Ly = y_pre.shape
+    bb = max(1, min(batch_block, B))
     lab = min(la_block, La)
     lyb = min(ly_block, Ly)
+    Bp = (B + bb - 1) // bb * bb
     Lap = (La + lab - 1) // lab * lab
     Lyp = (Ly + lyb - 1) // lyb * lyb
-    pad_a = ((0, 0), (0, Lap - La))
-    pad_y = ((0, 0), (0, Lyp - Ly))
+    pad_a = ((0, Bp - B), (0, Lap - La))
+    pad_y = ((0, Bp - B), (0, Lyp - Ly))
     a_pre = jnp.pad(a_pre, pad_a, constant_values=jnp.iinfo(jnp.int32).max)
     a_post = jnp.pad(a_post, pad_a, constant_values=-1)
     y_pre = jnp.pad(y_pre, pad_y, constant_values=jnp.iinfo(jnp.int32).max)
     y_post = jnp.pad(y_post, pad_y, constant_values=-1)
     y_cnt = jnp.pad(y_cnt, pad_y)
 
-    out = pl.pallas_call(
+    out, sup = pl.pallas_call(
         _intersect_kernel,
-        grid=(B, Lap // lab, Lyp // lyb),
+        grid=(Bp // bb, Lap // lab, Lyp // lyb),
         in_specs=[
-            pl.BlockSpec((1, lab), lambda b, i, j: (b, i)),
-            pl.BlockSpec((1, lab), lambda b, i, j: (b, i)),
-            pl.BlockSpec((1, lyb), lambda b, i, j: (b, j)),
-            pl.BlockSpec((1, lyb), lambda b, i, j: (b, j)),
-            pl.BlockSpec((1, lyb), lambda b, i, j: (b, j)),
+            pl.BlockSpec((bb, lab), lambda b, i, j: (b, i)),
+            pl.BlockSpec((bb, lab), lambda b, i, j: (b, i)),
+            pl.BlockSpec((bb, lyb), lambda b, i, j: (b, j)),
+            pl.BlockSpec((bb, lyb), lambda b, i, j: (b, j)),
+            pl.BlockSpec((bb, lyb), lambda b, i, j: (b, j)),
         ],
-        out_specs=pl.BlockSpec((1, lab), lambda b, i, j: (b, i)),
-        out_shape=jax.ShapeDtypeStruct((B, Lap), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((bb, lab), lambda b, i, j: (b, i)),
+            pl.BlockSpec((bb, 1), lambda b, i, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, Lap), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+        ],
         interpret=interpret,
     )(a_pre, a_post, y_pre, y_post, y_cnt)
-    return out[:, :La].astype(jnp.int32)
+    return out[:B, :La].astype(jnp.int32), sup[:B, 0].astype(jnp.int32)

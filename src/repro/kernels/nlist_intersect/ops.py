@@ -1,12 +1,25 @@
-"""Public op: nlist_intersect — Pallas (mask-matmul) on TPU, searchsorted jnp
-elsewhere. Both return merged counts aligned with A's code slots."""
+"""Public op: nlist_intersect — Pallas (mask-matmul, fused support) on TPU,
+searchsorted jnp elsewhere. Both return ``(merged, supports)``: merged counts
+aligned with A's code slots plus their per-candidate row sums, so the mining
+waves never re-read the merged state just to reduce it.
+
+fp32 exactness bound: the Pallas path accumulates counts in fp32, which is
+exact only below 2^24. Every count the kernel can produce is bounded by the
+shard's transaction count, so callers must keep per-shard row counts below
+2^24 (``HPrepostMiner.prepare`` raises before dispatching otherwise); the
+jnp path is integer-exact and has no such bound.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.nlist_intersect.kernel import nlist_intersect_pallas
-from repro.kernels.nlist_intersect.ref import nlist_intersect_ref
+from repro.kernels.nlist_intersect.ref import nlist_intersect_fused_ref
+
+# values >= 2^24 are not exactly representable in fp32: the Pallas kernel
+# must never see a possible count at or above this
+FP32_EXACT_MAX = 1 << 24
 
 
 def nlist_intersect(
@@ -17,13 +30,18 @@ def nlist_intersect(
     y_cnt: jnp.ndarray,
     *,
     backend: str = "auto",
+    la_block: int = 512,
+    ly_block: int = 512,
+    batch_block: int = 8,
     interpret: bool = False,
-) -> jnp.ndarray:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     use_pallas = backend == "pallas" or (
         backend == "auto" and jax.default_backend() == "tpu"
     )
     if use_pallas:
         return nlist_intersect_pallas(
-            a_pre, a_post, y_pre, y_post, y_cnt, interpret=interpret
+            a_pre, a_post, y_pre, y_post, y_cnt,
+            la_block=la_block, ly_block=ly_block, batch_block=batch_block,
+            interpret=interpret,
         )
-    return nlist_intersect_ref(a_pre, a_post, y_pre, y_post, y_cnt)
+    return nlist_intersect_fused_ref(a_pre, a_post, y_pre, y_post, y_cnt)

@@ -1,8 +1,20 @@
-"""Pure-jnp oracle: batched searchsorted-based N-list intersection."""
+"""Pure-jnp oracle: batched searchsorted-based N-list intersection, plus the
+same fused ``(merged, supports)`` surface the Pallas kernel exposes."""
 import jax.numpy as jnp
 
 from repro.core.nlist import batched_intersect_jnp
 
 
 def nlist_intersect_ref(a_pre, a_post, y_pre, y_post, y_cnt) -> jnp.ndarray:
+    """Merged counts (B, La) only — the historical single-output oracle the
+    parity tests diff the fused kernel against."""
     return batched_intersect_jnp(a_pre, a_post, y_pre, y_post, y_cnt).astype(jnp.int32)
+
+
+def nlist_intersect_fused_ref(
+    a_pre, a_post, y_pre, y_post, y_cnt
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(merged, supports): the op-level contract. Exact integer math — the
+    fp32 < 2^24 bound only constrains the Pallas path."""
+    merged = nlist_intersect_ref(a_pre, a_post, y_pre, y_post, y_cnt)
+    return merged, merged.sum(axis=1).astype(jnp.int32)

@@ -18,9 +18,21 @@ hprepost requests by (database fingerprint, device config), build one
 ``PreparedDB`` at the group's loosest threshold, and serve every threshold
 from it through ``mine_prepared`` — prep runs once per group, not once per
 request. Host miners keep the one-shot path.
+
+Persistent PreparedDB cache: planning used to live per-``sweep``/
+``submit_many`` invocation, so repeated *ad-hoc* ``submit`` s on the same
+database still re-ran every prep stage. The engine now keeps an LRU of
+device-resident ``PreparedDB`` s keyed exactly like planned groups —
+(database fingerprint, n_items, device config) — under a configurable
+byte budget (``prep_cache_bytes``, accounted with ``PreparedDB.
+prep_bytes``). A cached entry serves any request whose resolved threshold
+is at least the entry's floor; looser thresholds (or a k>1 request
+hitting an F1-only entry) rebuild at the new floor and replace it.
+``cache_info()`` surfaces hit/miss/eviction counters.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
 import time
@@ -50,7 +62,8 @@ class MiningEngine:
     mesh-bound miner in the session shares it.
     """
 
-    def __init__(self, mesh=None, data_axis=None, model_axis="model"):
+    def __init__(self, mesh=None, data_axis=None, model_axis="model",
+                 prep_cache_bytes: int = 1 << 30):
         self.mesh = mesh
         self.data_axis = data_axis
         self.model_axis = model_axis
@@ -58,9 +71,17 @@ class MiningEngine:
         self.stats = {
             "submits": 0,  # requests answered (planned or not)
             "frontends_built": 0,
-            "prepares": 0,  # shared PreparedDB builds (one per planned group)
+            # shared PreparedDB builds made for a *planned group*; ad-hoc
+            # submit builds are visible as cache_info()["misses"] instead
+            "prepares": 0,
             "prepared_mines": 0,  # requests served from a shared PreparedDB
         }
+        # persistent PreparedDB cache: (fingerprint, n_items, device config)
+        # -> (miner, PreparedDB), LRU under a per-shard byte budget;
+        # prep_cache_bytes <= 0 disables caching entirely
+        self.prep_cache_bytes = int(prep_cache_bytes)
+        self._prep_cache: collections.OrderedDict = collections.OrderedDict()
+        self._cache_stats = {"hits": 0, "misses": 0, "evictions": 0}
 
     def frontend(self, algorithm: str) -> Miner:
         """The session's (lazily built, then resident) miner for ``algorithm``."""
@@ -79,9 +100,96 @@ class MiningEngine:
         return sum(getattr(fe, "miners_built", 0) for fe in self._frontends.values())
 
     def submit(self, rows, n_items: int, spec: MineSpec) -> MineResult:
-        """Mine one database through the session's warm frontends."""
+        """Mine one database through the session's warm frontends.
+
+        hprepost requests route through the persistent PreparedDB cache:
+        back-to-back submits on the same database re-run zero prep stages
+        (the second answer carries ``prep_shared`` and 0.0 prep times)."""
         self.stats["submits"] += 1
+        if spec.algorithm == "hprepost" and self.prep_cache_bytes > 0:
+            return self._submit_cached(rows, n_items, spec)
         return self.frontend(spec.algorithm).mine(rows, n_items, spec)
+
+    # ------------------------------------------------ PreparedDB LRU cache
+    def cache_info(self) -> dict:
+        """Counters + occupancy of the persistent PreparedDB cache."""
+        return {
+            **self._cache_stats,
+            "entries": len(self._prep_cache),
+            "bytes_in_use": sum(
+                p.prep_bytes for _, p in self._prep_cache.values()
+            ),
+            "byte_budget": self.prep_cache_bytes,
+        }
+
+    def _cache_key(self, rows, n_items: int, spec: MineSpec,
+                   fp_cache: dict | None = None) -> tuple:
+        fe = self.frontend("hprepost")
+        fp = None if fp_cache is None else fp_cache.get(id(rows))
+        if fp is None:
+            fp = self._fingerprint(rows)
+            if fp_cache is not None:
+                fp_cache[id(rows)] = fp
+        return (spec.algorithm, fp, n_items, fe._device_config(spec))
+
+    def _cache_lookup(self, key, min_count: int, need_waves: bool):
+        """``(miner, prepared)`` if the cached entry can serve, else None.
+
+        A floor-``f`` entry serves any ``min_count >= f`` exactly (see
+        ``PreparedDB``); a looser request — or a k>1 request against an
+        F1-only entry — cannot be served and must rebuild."""
+        ent = self._prep_cache.get(key)
+        if ent is None:
+            self._cache_stats["misses"] += 1
+            return None
+        _, prepared = ent
+        if min_count < prepared.min_count_floor or (need_waves and prepared.f1_only):
+            self._cache_stats["misses"] += 1
+            return None
+        self._prep_cache.move_to_end(key)
+        self._cache_stats["hits"] += 1
+        return ent
+
+    def _cache_insert(self, key, miner, prepared) -> None:
+        """Insert (replacing any stale entry), then evict least-recently-
+        used entries until the byte budget holds — possibly including the
+        new entry itself when it alone exceeds the budget.
+
+        Exception: a cheap F1-only build never replaces a full
+        (waves-capable) entry at the same key — the wave state (Job 2 /
+        pack / F2) is the expensive part, it keeps serving future k>1
+        traffic, and F1-only prep costs one histogram to redo."""
+        if self.prep_cache_bytes <= 0:
+            return
+        old = self._prep_cache.get(key)
+        if old is not None and prepared.f1_only and not old[1].f1_only:
+            return
+        self._prep_cache.pop(key, None)
+        self._prep_cache[key] = (miner, prepared)
+        in_use = sum(p.prep_bytes for _, p in self._prep_cache.values())
+        while in_use > self.prep_cache_bytes and self._prep_cache:
+            _, (_, dropped) = self._prep_cache.popitem(last=False)
+            in_use -= dropped.prep_bytes
+            self._cache_stats["evictions"] += 1
+
+    def _submit_cached(self, rows, n_items: int, spec: MineSpec) -> MineResult:
+        fe = self.frontend("hprepost")
+        rows = np.asarray(rows)
+        key = self._cache_key(rows, n_items, spec)
+        min_count = spec.resolve(len(rows))
+        need_waves = spec.max_k is None or spec.max_k > 1
+        ent = self._cache_lookup(key, min_count, need_waves)
+        if ent is not None:
+            self.stats["prepared_mines"] += 1
+            miner, prepared = ent
+            return fe.mine_prepared(miner, prepared, spec, prep_shared=True)
+        t0 = time.perf_counter()
+        miner, prepared = fe.prepare(rows, n_items, min_count, spec,
+                                     need_waves=need_waves)
+        self._cache_insert(key, miner, prepared)
+        return fe.mine_prepared(
+            miner, prepared, spec, prep_stages=prepared.stage_times, t0=t0
+        )
 
     # ------------------------------------------------------ planned batches
     @staticmethod
@@ -97,24 +205,37 @@ class MiningEngine:
 
         Only the distributed hprepost backend has a prepare/mine split; a
         group must agree on the database and on every device-level knob
-        (the per-call threshold / max_k / patterns are free to differ)."""
+        (the per-call threshold / max_k / patterns are free to differ). The
+        key doubles as the persistent PreparedDB cache key."""
         if req.spec.algorithm != "hprepost":
             return None
-        fe = self.frontend("hprepost")
-        fp = fp_cache.get(id(req.rows))
-        if fp is None:
-            fp = fp_cache[id(req.rows)] = self._fingerprint(req.rows)
-        return (req.spec.algorithm, fp, req.n_items, fe._device_config(req.spec))
+        return self._cache_key(req.rows, req.n_items, req.spec, fp_cache)
 
-    def _run_group(self, reqs: list[MineRequest]) -> list[MineResult]:
+    def _run_group(self, reqs: list[MineRequest], key: tuple) -> list[MineResult]:
         """Serve one planned group: prep once at the loosest threshold, then
         the k>2 waves per request. The first request pays (and reports) the
-        shared prep; the rest carry 0.0 prep stages and ``prep_shared``."""
+        shared prep; the rest carry 0.0 prep stages and ``prep_shared``. A
+        persistent-cache hit at the group floor skips prep entirely (every
+        request is then a shared consumer)."""
         fe = self.frontend("hprepost")
         rows = np.asarray(reqs[0].rows)
         n_rows = len(rows)
         floor = min(r.spec.resolve(n_rows) for r in reqs)
         need_waves = any(r.spec.max_k is None or r.spec.max_k > 1 for r in reqs)
+        ent = (
+            self._cache_lookup(key, floor, need_waves)
+            if self.prep_cache_bytes > 0 else None
+        )
+        if ent is not None:
+            miner, prepared = ent
+            out = []
+            for r in reqs:
+                self.stats["submits"] += 1
+                self.stats["prepared_mines"] += 1
+                out.append(
+                    fe.mine_prepared(miner, prepared, r.spec, prep_shared=True)
+                )
+            return out
         t0 = time.perf_counter()
         try:
             miner, prepared = fe.prepare(
@@ -127,6 +248,7 @@ class MiningEngine:
             # where any real per-request error surfaces precisely
             return [self.submit(r.rows, r.n_items, r.spec) for r in reqs]
         self.stats["prepares"] += 1
+        self._cache_insert(key, miner, prepared)
         out = []
         for j, r in enumerate(reqs):
             self.stats["submits"] += 1
@@ -160,11 +282,11 @@ class MiningEngine:
                 loners.append(i)
             else:
                 groups.setdefault(key, []).append(i)
-        for idxs in groups.values():
+        for key, idxs in groups.items():
             if len(idxs) == 1:
                 loners.append(idxs[0])
                 continue
-            for i, res in zip(idxs, self._run_group([requests[i] for i in idxs])):
+            for i, res in zip(idxs, self._run_group([requests[i] for i in idxs], key)):
                 results[i] = res
         for i in sorted(loners):
             r = requests[i]

@@ -193,6 +193,9 @@ class HPrepostFrontend(_MinerBase):
         return HPrepostConfig(
             nlist_width=spec.nlist_width,
             candidate_unit=spec.candidate_unit,
+            la_block=spec.la_block,
+            ly_block=spec.ly_block,
+            batch_block=spec.batch_block,
             partition_candidates=spec.partition_candidates,
             backend=spec.backend,
             max_f1=spec.max_f1,

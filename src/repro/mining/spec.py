@@ -35,6 +35,9 @@ class MineSpec:
     backend: str = "auto"  # kernel dispatch: auto | pallas | jnp
     candidate_unit: int = 256  # hprepost: candidate buffers, pow2 multiples
     nlist_width: int | None = None  # hprepost: static N-list width (None = auto)
+    la_block: int = 512  # hprepost intersect kernel: A-codes per tile
+    ly_block: int = 512  # hprepost intersect kernel: Y-codes per tile
+    batch_block: int = 8  # hprepost intersect kernel: candidates per program
     partition_candidates: bool = True  # hprepost mode B (PFP groups)
     max_f1: int = 4096  # guard on |F-list|
     max_itemsets: int = 2_000_000
@@ -52,6 +55,9 @@ class MineSpec:
             raise ValueError(f"max_k must be >= 1, got {self.max_k}")
         if self.rank_k < 1:
             raise ValueError(f"rank_k must be >= 1, got {self.rank_k}")
+        for knob in ("la_block", "ly_block", "batch_block"):
+            if getattr(self, knob) < 1:
+                raise ValueError(f"{knob} must be >= 1, got {getattr(self, knob)}")
 
     def resolve(self, n_rows: int) -> int:
         """Absolute support threshold for a database of ``n_rows`` rows.

@@ -1,0 +1,167 @@
+"""Persistent PreparedDB cache: repeated ad-hoc ``submit`` s must stop
+re-running Job 1 / Job 2 / pack / F2, under an LRU byte budget.
+
+The acceptance anchor: two consecutive ``engine.submit`` s on the same rows
+re-run zero prep stages — proven by the miner's ``stage_counters`` and the
+engine's ``cache_info()`` — and eviction honors ``prep_cache_bytes``.
+"""
+import numpy as np
+import pytest
+
+from repro.data.synth import random_db
+from repro.mining import MineSpec, MiningEngine
+
+SPEC = MineSpec(algorithm="hprepost", max_k=4, candidate_unit=8, min_sup=0.3,
+                nlist_width=16)
+
+
+def _db(seed=0, n_tx=60, n_items=10):
+    return random_db(np.random.default_rng(seed), n_tx, n_items, 6), n_items
+
+
+def _counters(eng, spec=SPEC):
+    return dict(eng.frontend("hprepost").miner_for(spec).stage_counters)
+
+
+def test_second_submit_reruns_zero_prep_stages():
+    rows, n_items = _db()
+    eng = MiningEngine()
+    r1 = eng.submit(rows, n_items, SPEC)
+    c1 = _counters(eng)
+    assert c1["job1"] == c1["job2"] == c1["pack"] == c1["f2"] == 1
+    assert not r1.prep_shared
+
+    r2 = eng.submit(rows, n_items, SPEC)
+    c2 = _counters(eng)
+    for stage in ("job1", "job2", "pack", "f2"):
+        assert c2[stage] == 1, stage  # zero prep re-runs
+    info = eng.cache_info()
+    assert info["hits"] == 1 and info["misses"] == 1 and info["entries"] == 1
+    assert info["bytes_in_use"] > 0
+    assert r2.prep_shared  # honest attribution: this submit paid no prep
+    for k in ("job1_flist", "job2_ppc_pack", "f2_scan"):
+        assert r2.stage_times_s[k] == 0.0
+    assert r2.itemsets == r1.itemsets and r2.peak_bytes == r1.peak_bytes
+
+
+def test_tighter_threshold_served_looser_rebuilds():
+    rows, n_items = _db(1)
+    eng = MiningEngine()
+    eng.submit(rows, n_items, SPEC.with_(min_sup=0.2))
+    # tighter threshold: floor structures are supersets -> cache hit
+    tight = eng.submit(rows, n_items, SPEC.with_(min_sup=0.4))
+    assert eng.cache_info()["hits"] == 1
+    assert _counters(eng)["job1"] == 1
+    assert tight.itemsets == MiningEngine().submit(
+        rows, n_items, SPEC.with_(min_sup=0.4)).itemsets
+    # looser threshold: below the cached floor -> rebuild, entry replaced
+    loose = eng.submit(rows, n_items, SPEC.with_(min_sup=0.1))
+    info = eng.cache_info()
+    assert info["misses"] == 2 and info["entries"] == 1
+    assert _counters(eng)["job1"] == 2
+    assert loose.itemsets == MiningEngine().submit(
+        rows, n_items, SPEC.with_(min_sup=0.1)).itemsets
+
+
+def test_f1_only_entry_upgrades_for_wave_traffic():
+    rows, n_items = _db(2)
+    eng = MiningEngine()
+    spec = SPEC.with_(min_sup=0.15)  # frequent pairs exist at this threshold
+    eng.submit(rows, n_items, spec.with_(max_k=1))
+    assert _counters(eng)["job2"] == 0  # F1-only prep skipped the tree build
+    res = eng.submit(rows, n_items, spec.with_(max_k=3))  # needs waves: rebuild
+    assert eng.cache_info()["misses"] == 2
+    assert _counters(eng)["job2"] == 1
+    assert any(len(s) > 1 for s in res.itemsets)
+    # and the upgraded (full) entry serves max_k=1 traffic right back
+    r1 = eng.submit(rows, n_items, spec.with_(max_k=1))
+    assert eng.cache_info()["hits"] == 1
+    assert all(len(s) == 1 for s in r1.itemsets)
+
+
+def test_f1_only_build_never_evicts_wave_state():
+    rows, n_items = _db(11)
+    eng = MiningEngine()
+    spec = SPEC.with_(min_sup=0.3)
+    eng.submit(rows, n_items, spec)  # full entry (Job2/pack/F2) at floor 0.3
+    # a looser max_k=1 request misses (floor too tight) and builds F1-only
+    # prep — but must not replace the expensive waves-capable entry
+    eng.submit(rows, n_items, spec.with_(min_sup=0.2, max_k=1))
+    assert eng.cache_info()["entries"] == 1
+    # ...which keeps serving k>1 traffic at the original floor prep-free
+    res = eng.submit(rows, n_items, spec)
+    assert eng.cache_info()["hits"] == 1 and res.prep_shared
+    assert _counters(eng)["job2"] == 1  # the tree build ran exactly once
+
+
+def test_eviction_honors_byte_budget():
+    rows_a, n_items = _db(3)
+    rows_b, _ = _db(4)  # same shape + nlist_width -> same prep footprint
+    probe = MiningEngine()
+    probe.submit(rows_a, n_items, SPEC)
+    one = probe.cache_info()["bytes_in_use"]
+    assert one > 0
+
+    eng = MiningEngine(prep_cache_bytes=int(one * 1.5))  # fits 1, not 2
+    eng.submit(rows_a, n_items, SPEC)
+    eng.submit(rows_b, n_items, SPEC)
+    info = eng.cache_info()
+    assert info["evictions"] == 1 and info["entries"] == 1
+    assert info["bytes_in_use"] <= info["byte_budget"]
+    # rows_a was the LRU victim: resubmitting it is a miss again
+    eng.submit(rows_a, n_items, SPEC)
+    assert eng.cache_info()["misses"] == 3
+    # rows_b stays warm until evicted in turn
+    assert _counters(eng)["job1"] == 3
+
+
+def test_lru_order_is_recency_not_insertion():
+    rows_a, n_items = _db(5)
+    rows_b, _ = _db(6)
+    rows_c, _ = _db(7)
+    probe = MiningEngine()
+    probe.submit(rows_a, n_items, SPEC)
+    one = probe.cache_info()["bytes_in_use"]
+
+    eng = MiningEngine(prep_cache_bytes=int(one * 2.5))  # fits 2, not 3
+    eng.submit(rows_a, n_items, SPEC)
+    eng.submit(rows_b, n_items, SPEC)
+    eng.submit(rows_a, n_items, SPEC)  # touch a: b becomes the LRU entry
+    eng.submit(rows_c, n_items, SPEC)  # evicts b, not a
+    assert eng.cache_info()["evictions"] == 1
+    eng.submit(rows_a, n_items, SPEC)
+    assert eng.cache_info()["hits"] == 2  # a survived both inserts
+
+
+def test_zero_budget_disables_caching():
+    rows, n_items = _db(8)
+    eng = MiningEngine(prep_cache_bytes=0)
+    r1 = eng.submit(rows, n_items, SPEC)
+    r2 = eng.submit(rows, n_items, SPEC)
+    info = eng.cache_info()
+    assert info["entries"] == 0 and info["hits"] == 0 and info["misses"] == 0
+    assert _counters(eng)["job1"] == 2  # one-shot path both times
+    assert r1.itemsets == r2.itemsets
+
+
+def test_sweep_then_adhoc_submit_hits_group_prep():
+    rows, n_items = _db(9)
+    eng = MiningEngine()
+    eng.sweep(rows, n_items, SPEC, [0.4, 0.2])
+    assert eng.stats["prepares"] == 1
+    # ad-hoc traffic after the sweep rides the group's PreparedDB
+    res = eng.submit(rows, n_items, SPEC.with_(min_sup=0.3))
+    assert eng.cache_info()["hits"] == 1
+    assert _counters(eng)["job1"] == 1
+    assert res.prep_shared
+    assert res.itemsets == MiningEngine().submit(
+        rows, n_items, SPEC.with_(min_sup=0.3)).itemsets
+
+
+def test_different_device_config_is_a_different_entry():
+    rows, n_items = _db(10)
+    eng = MiningEngine()
+    eng.submit(rows, n_items, SPEC)
+    eng.submit(rows, n_items, SPEC.with_(candidate_unit=16))
+    info = eng.cache_info()
+    assert info["entries"] == 2 and info["misses"] == 2 and info["hits"] == 0

@@ -190,9 +190,13 @@ def test_group_floor_tripping_max_f1_degrades_to_per_request():
     with pytest.raises(ValueError, match="max_f1"):
         eng.sweep(rows, 10, spec, [0.5, 0.2])
     assert eng.stats["prepares"] == 0  # no shared prep was recorded
-    # a feasible group afterwards still plans normally
+    # a feasible group afterwards is served without re-running prep: the
+    # ad-hoc submit above already paid for this floor, and its PreparedDB
+    # sits in the engine's persistent cache
+    j1 = eng.frontend("hprepost").miner_for(spec).stage_counters["job1"]
     swept = eng.sweep(rows, 10, spec, [0.5, 0.6])
-    assert eng.stats["prepares"] == 1
+    assert eng.frontend("hprepost").miner_for(spec).stage_counters["job1"] == j1
+    assert eng.cache_info()["hits"] >= 1
     assert swept[0].itemsets == ok.itemsets
 
 

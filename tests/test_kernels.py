@@ -66,14 +66,45 @@ def _nlist_batch(rng, B, La, Ly):
     return map(jnp.asarray, (a_pre, a_post, y_pre, y_post, y_cnt))
 
 
+@pytest.mark.parametrize("bb", [1, 3, 8])
 @pytest.mark.parametrize("B,La,Ly", [(1, 1, 1), (3, 8, 5), (5, 40, 70), (2, 130, 257)])
-def test_nlist_intersect_sweep(B, La, Ly):
+def test_nlist_intersect_sweep(B, La, Ly, bb):
+    """Fused-kernel parity: merged counts match the oracle and the fused
+    support output equals ``merged.sum(axis=1)`` — across La/Ly that are not
+    block multiples and B that is not a batch_block multiple."""
     rng = np.random.default_rng(B * La + Ly)
     a_pre, a_post, y_pre, y_post, y_cnt = _nlist_batch(rng, B, La, Ly)
-    got = nlist_intersect_pallas(a_pre, a_post, y_pre, y_post, y_cnt,
-                                 la_block=64, ly_block=64, interpret=True)
+    got, sup = nlist_intersect_pallas(a_pre, a_post, y_pre, y_post, y_cnt,
+                                      la_block=64, ly_block=64,
+                                      batch_block=bb, interpret=True)
     want = nlist_intersect_ref(a_pre, a_post, y_pre, y_post, y_cnt)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(sup), np.asarray(want).sum(axis=1))
+
+
+def test_nlist_intersect_zero_count_and_pad_slots():
+    """Zero-count Y slots contribute nothing; all-PAD rows (the
+    pre=INT32_MAX / post=-1 / cnt=0 sentinel convention) yield zero merged
+    counts and zero support, including across batch padding."""
+    rng = np.random.default_rng(7)
+    B, La, Ly = 5, 24, 16
+    a_pre, a_post, y_pre, y_post, y_cnt = map(
+        np.asarray, _nlist_batch(rng, B, La, Ly))
+    y_cnt = y_cnt.copy()
+    y_cnt[1] = 0  # candidate 1: every Y slot zero-count
+    a_pre, a_post = a_pre.copy(), a_post.copy()
+    a_pre[2, :], a_post[2, :] = INF, -1  # candidate 2: all-PAD A list
+    y_pre, y_post = y_pre.copy(), y_post.copy()
+    y_pre[3, :], y_post[3, :], y_cnt[3, :] = INF, -1, 0  # candidate 3: all-PAD Y
+    args = [jnp.asarray(x) for x in (a_pre, a_post, y_pre, y_post, y_cnt)]
+    got, sup = nlist_intersect_pallas(*args, la_block=8, ly_block=8,
+                                      batch_block=2, interpret=True)
+    want = nlist_intersect_ref(*args)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(sup), np.asarray(want).sum(axis=1))
+    got, sup = np.asarray(got), np.asarray(sup)
+    for b in (1, 2, 3):
+        assert not got[b].any() and sup[b] == 0
 
 
 def test_nlist_intersect_real_tree(paper_db):
@@ -89,12 +120,14 @@ def test_nlist_intersect_real_tree(paper_db):
     a = packed[[q for q, _ in pairs]]
     y = packed[[p for _, p in pairs]]
     args = [jnp.asarray(x) for x in (a[:, :, 0], a[:, :, 1], y[:, :, 0], y[:, :, 1], y[:, :, 2])]
-    got = nlist_intersect_pallas(*args, la_block=8, ly_block=8, interpret=True)
+    got, sup = nlist_intersect_pallas(*args, la_block=8, ly_block=8,
+                                      batch_block=4, interpret=True)
     want = nlist_intersect_ref(*args)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(sup), np.asarray(want).sum(axis=1))
     # support(b,c) == 3 per the paper's data (rows containing both b and c)
     idx = pairs.index((0, 2))
-    assert int(np.asarray(got)[idx].sum()) == 3
+    assert int(np.asarray(sup)[idx]) == 3
 
 
 @pytest.mark.parametrize("dtype", [jnp.int32])
