@@ -5,14 +5,21 @@
 #                       kernel parity (tests/test_kernels.py, incl. the fused
 #                       intersect+support sweeps) runs first for fast signal
 #   make bench-smoke  - paper-figure benchmark at tiny scale (sanity, not numbers)
-#   make bench-json   - emit the BENCH_PR3.json perf trajectory (kernel micro-
-#                       bench + warm-engine miner timings) for future PRs to diff
+#   make bench-json   - emit the BENCH_PR4.json perf trajectory (kernel micro-
+#                       bench + service overlap/warm-start rows) for future PRs
+#                       to diff; earlier trajectories (BENCH_PR3.json) stay put
 #   make mine-smoke   - every CLI-selectable miner on a small synth dataset
+#   make serve-smoke  - MiningService end-to-end: concurrent submits incl. a
+#                       sweep + a host-algorithm request, drain, then a second
+#                       process that must warm-start from the snapshot store
+#                       with zero prep stages
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-tier1 bench-smoke bench-json mine-smoke
+SERVE_SNAP := .serve-smoke-snapshots
+
+.PHONY: test test-tier1 bench-smoke bench-json mine-smoke serve-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -31,3 +38,11 @@ mine-smoke:
 	for a in hprepost prepost fpgrowth apriori; do \
 		$(PY) -m repro.launch.mine --algo $$a --dataset mushroom --scale 0.05 --min-sup 0.3 --top 3 || exit 1; \
 	done
+
+serve-smoke:
+	rm -rf $(SERVE_SNAP)
+	$(PY) -m repro.launch.mine --serve --snapshot-dir $(SERVE_SNAP) \
+		--dataset mushroom --scale 0.05 --sweep 0.4,0.3,0.2 --max-k 4
+	$(PY) -m repro.launch.mine --serve --snapshot-dir $(SERVE_SNAP) \
+		--dataset mushroom --scale 0.05 --sweep 0.4,0.3,0.2 --max-k 4 --expect-warm
+	rm -rf $(SERVE_SNAP)

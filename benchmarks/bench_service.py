@@ -1,0 +1,125 @@
+"""Service throughput/latency bench: the PR 4 acceptance numbers.
+
+Two measurements, both through one warm engine (compile cost is paid by a
+warmup pass and never timed):
+
+  cross-group overlap   four distinct databases, a threshold sweep each
+                        -> four planned groups. Sequential baseline: each
+                        group served alone (sum of walls). Service path:
+                        one batch through ``GroupScheduler`` — group g+1's
+                        prepare (host shuffle + device Jobs 1/2/pack/F2)
+                        runs while group g's wave loop drains, so the
+                        batch wall must undercut the sequential sum. The
+                        LRU is disabled for this phase so every group
+                        really pays prep — with caching on there is
+                        nothing left to overlap. Both paths are timed
+                        best-of-N after a shared warmup: the workload is
+                        deliberately dispatch-bound (small DBs, several
+                        groups) because that is where a prep thread buys
+                        wall-clock on a 2-core CI box — at XLA-saturating
+                        sizes the cores are already busy and overlap is
+                        contention, not speedup (expect single-digit
+                        percent here; the headroom grows with cores).
+
+  snapshot warm-start   cold prep+mine vs ``clear_prep_cache()`` + mine
+                        through the on-disk PreparedDB store: the
+                        warm-start serves with zero prep stages, so its
+                        latency is load + waves only.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+
+def _pc() -> float:
+    return time.perf_counter()
+
+
+def run(quick: bool = False) -> list[tuple[str, float, str]]:
+    from repro.data.synth import random_db
+    from repro.mining import MineRequest, MineSpec, MiningEngine
+    from repro.mining.service import GroupScheduler
+
+    n_tx, n_items, max_len = 800, 24, 8
+    sweeps = [0.1, 0.07, 0.05]
+    # paired reps: each rep times the sequential path and the batch path
+    # back-to-back, and the headline statistic is the MEDIAN of per-rep
+    # savings — the per-batch margin (a few hidden prepares of a few ms)
+    # sits near OS-scheduler noise on a 2-core box, and pairing cancels
+    # the machine-wide drift that poisons unpaired minima
+    reps = 11 if quick else 15
+    spec = MineSpec(algorithm="hprepost", max_k=5, candidate_unit=64, min_sup=0.5)
+    dbs = [random_db(np.random.default_rng(seed), n_tx, n_items, max_len)
+           for seed in range(4)]
+    groups = [
+        [MineRequest(rows, n_items, spec.with_(min_sup=s)) for s in sweeps]
+        for rows in dbs
+    ]
+    all_reqs = [r for g in groups for r in g]
+    out: list[tuple[str, float, str]] = []
+
+    # --- cross-group overlap (prep of group g+1 hidden under mine of g)
+    engine = MiningEngine(prep_cache_bytes=0)  # every group pays real prep
+    with GroupScheduler(engine, overlap=False) as seq, GroupScheduler(engine) as ovl:
+        seq.run(all_reqs)  # warmup: compile every jit both phases will hit
+        ovl.run(all_reqs)  # ... and the overlapped path's thread handoffs
+        pairs = []
+        group_walls = [float("inf")] * len(groups)
+        for _ in range(reps):
+            walls = []
+            for g in groups:
+                t0 = _pc()
+                seq.run(g)
+                walls.append(_pc() - t0)
+            group_walls = [min(a, b) for a, b in zip(group_walls, walls)]
+            t0 = _pc()
+            ovl.run(all_reqs)
+            pairs.append((sum(walls), _pc() - t0))
+        n_itemsets = sum(len(r.itemsets) for r in seq.run(all_reqs))
+    savings = sorted(1 - b / s for s, b in pairs)
+    saved = savings[len(savings) // 2]  # median of paired per-rep savings
+    pos = sum(1 for x in savings if x > 0)
+    t_seq, t_batch = min(p[0] for p in pairs), min(p[1] for p in pairs)
+    for i, w in enumerate(group_walls):
+        out.append((f"service_group{i}_sequential", w * 1e6, f"db{i} sweep x{len(sweeps)}"))
+    out.append((
+        f"service_batch_{len(dbs)}db_overlap",
+        t_batch * 1e6,
+        f"sequential_sum={t_seq * 1e6:.0f}us median_saved={100 * saved:.0f}% "
+        f"positive_reps={pos}/{reps} "
+        f"overlapped_prepares={ovl.stats['overlapped_prepares']} n={n_itemsets}",
+    ))
+
+    # --- snapshot warm-start (cold prep vs zero-prep load from the store)
+    with tempfile.TemporaryDirectory() as d:
+        eng = MiningEngine(snapshot_dir=d)
+        req = groups[0][0]
+        eng.submit(req.rows, req.n_items, req.spec)  # warmup: compile + spill
+        eng.clear_prep_cache()
+        import shutil, os
+
+        for entry in eng.snapshot_store.entries():  # force a true cold build
+            shutil.rmtree(entry, ignore_errors=True)
+        t0 = _pc()
+        eng.submit(req.rows, req.n_items, req.spec)
+        t_cold = _pc() - t0
+        eng.clear_prep_cache()  # "process restart": LRU gone, store populated
+        t0 = _pc()
+        res = eng.submit(req.rows, req.n_items, req.spec)
+        t_warm = _pc() - t0
+        assert res.service_stats.get("prep_source") == "snapshot", res.service_stats
+    out.append(("service_warmstart_cold_prep", t_cold * 1e6, "prep rebuilt from rows"))
+    out.append((
+        "service_warmstart_snapshot",
+        t_warm * 1e6,
+        f"prepares=0 cold/warm={t_cold / max(t_warm, 1e-9):.2f}x",
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, note in run(quick=True):
+        print(f"{name},{us:.0f},{note}")

@@ -3,6 +3,7 @@
   paper_runtime_memory : Figs 3-6 (runtime) + Figs 7-10 (memory)
   scaling              : §4 MapReduce block partitioning (workers sweep)
   kernels              : per-kernel micro-latency (CPU ref path)
+  service              : cross-group overlap + snapshot warm-start (PR 4)
   roofline             : dry-run aggregation (EXPERIMENTS.md §Roofline)
 
 Prints ``name,us_per_call,derived`` CSV lines per the harness contract.
@@ -18,22 +19,29 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
-BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR3.json")
+BENCH_PR = 4  # this PR's trajectory tag: emit_json writes BENCH_PR<n>.json
 
 
-def emit_json(path: str = BENCH_JSON, records=None) -> str:
+def emit_json(path: str | None = None, records=None, pr: int = BENCH_PR) -> str:
     """Write the machine-readable perf trajectory: kernel micro-bench rows,
-    the host wave-planning vec-vs-loop comparison, and end-to-end miner
-    timings through one warm ``MiningEngine`` (the hprepost row is a
-    PreparedDB-cache-hit resubmit). Future PRs diff their own emit against
-    this file instead of re-deriving a baseline."""
-    from benchmarks.bench_kernels import run as kernels_run
+    the host wave-planning vec-vs-loop comparison, end-to-end miner timings
+    through one warm ``MiningEngine``, and the service rows (cross-group
+    overlap + snapshot warm-start). Future PRs diff their own emit against
+    this file instead of re-deriving a baseline.
 
+    The output name is parameterized by ``pr`` (default: this PR), so each
+    PR's trajectory lands in its own ``BENCH_PR<n>.json`` instead of
+    overwriting its predecessor's."""
+    from benchmarks.bench_kernels import run as kernels_run
+    from benchmarks.bench_service import run as service_run
+
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "..", f"BENCH_PR{pr}.json")
     if records is None:
-        records = kernels_run()
+        records = kernels_run() + service_run(quick=True)
     payload = {
         "schema": "bench-trajectory-v1",
-        "pr": 3,
+        "pr": pr,
         "records": [
             {"name": name, "us_per_call": round(us, 1), "note": note}
             for name, us, note in records
@@ -67,13 +75,17 @@ def main() -> None:
         print(f"fig7-10_memory_prepost_{tag},0,{r['prepost_bytes']}B")
         print(f"fig7-10_memory_fpgrowth_{tag},0,{r['fpgrowth_bytes']}B")
 
-    # --- kernels (+ the BENCH_PR3.json perf trajectory, from the same run)
+    # --- kernels + service (one BENCH_PR<n>.json trajectory from this run)
     from benchmarks.bench_kernels import run as kernels_run
+    from benchmarks.bench_service import run as service_run
 
     recs = kernels_run()
     for name, us, note in recs:
         print(f"kernel_{name},{us:.0f},{note}")
-    emit_json(records=recs)
+    srecs = service_run(quick=args.quick)
+    for name, us, note in srecs:
+        print(f"{name},{us:.0f},{note}")
+    emit_json(records=recs + srecs)
 
     # --- scaling (subprocesses with fake devices)
     if not args.skip_scaling:

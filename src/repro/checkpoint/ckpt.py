@@ -16,12 +16,13 @@ from __future__ import annotations
 
 import json
 import os
-import shutil
 import threading
 from typing import Any
 
 import jax
 import numpy as np
+
+from repro.checkpoint.atomic import fsync_write, prune_oldest, save_array, write_dir_atomic
 
 
 def _flatten(tree, prefix=""):
@@ -57,37 +58,37 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------ io
     def _write(self, step: int, host_tree: dict[str, np.ndarray], extra: dict):
-        tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
         final = os.path.join(self.dir, f"step_{step:09d}")
-        shutil.rmtree(tmp, ignore_errors=True)
-        os.makedirs(tmp)
         manifest = {"step": step, "arrays": {}, "extra": extra}
-        for i, (name, arr) in enumerate(host_tree.items()):
-            fname = f"a{i:06d}.npy"
-            with open(os.path.join(tmp, fname), "wb") as f:
-                np.save(f, arr)
-                f.flush()
-                os.fsync(f.fileno())
-            manifest["arrays"][name] = {"file": fname, "dtype": str(arr.dtype), "shape": list(arr.shape)}
-        mpath = os.path.join(tmp, "manifest.json")
-        with open(mpath, "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        shutil.rmtree(final, ignore_errors=True)
-        os.rename(tmp, final)
+
+        def writer(tmp):
+            for i, (name, arr) in enumerate(host_tree.items()):
+                fname = f"a{i:06d}.npy"
+                save_array(os.path.join(tmp, fname), arr)
+                manifest["arrays"][name] = {"file": fname, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+            fsync_write(os.path.join(tmp, "manifest.json"), json.dumps(manifest).encode())
+
+        write_dir_atomic(final, writer)
         self._gc()
 
     def _gc(self):
-        steps = self.list_steps()
-        for s in steps[: -self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+        from repro.checkpoint.atomic import reap_stale_tmp
+
+        reap_stale_tmp(self.dir)  # residue of writers killed mid-save
+        if self.keep <= 0:  # match the old slicing semantics: retain all
+            return
+        prune_oldest(
+            [os.path.join(self.dir, f"step_{s:09d}") for s in self.list_steps()],
+            keep=self.keep,
+        )
 
     # ----------------------------------------------------------------- api
     def list_steps(self) -> list[int]:
+        from repro.checkpoint.atomic import is_tmp
+
         out = []
         for d in os.listdir(self.dir):
-            if d.startswith("step_") and not d.endswith(".tmp"):
+            if d.startswith("step_") and not is_tmp(d):
                 out.append(int(d[5:]))
         return sorted(out)
 

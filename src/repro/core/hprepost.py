@@ -47,6 +47,11 @@ from repro.kernels.nlist_intersect.ops import nlist_intersect
 
 INF32 = np.iinfo(np.int32).max
 
+# Version tag of the PreparedDB host payload (``to_host``/``from_host``).
+# Bump on any layout change so stale on-disk snapshots are rejected, not
+# misread.
+PREPARED_SCHEMA = 1
+
 
 @dataclasses.dataclass(frozen=True)
 class HPrepostConfig:
@@ -93,6 +98,89 @@ class PreparedDB:
     rows_flist_bytes: int  # the threshold-independent part of prep_bytes
     stage_times: dict[str, float]  # job1_flist / job2_ppc_pack / f2_scan
     f1_only: bool = False  # True when built with need_waves=False
+    n_shards: int = 1  # data-shard count (D) this prep was laid out for
+
+    def to_host(self) -> dict:
+        """Gather the prep to a host payload (plain numpy + scalars) for
+        cross-process persistence. ``packed`` keeps its ``(D, K, W, 3)``
+        per-shard layout — each leading slice is one reducer's PPC-tree
+        state, so the payload restores onto any mesh with the same data-
+        shard count (``from_host`` enforces that)."""
+        out = {
+            "schema": PREPARED_SCHEMA,
+            "n_items": int(self.n_items),
+            "n_rows": int(self.n_rows),
+            "min_count_floor": int(self.min_count_floor),
+            "width": int(self.width),
+            "f1_only": bool(self.f1_only),
+            "n_shards": int(self.n_shards),
+            "prep_bytes": int(self.prep_bytes),
+            "rows_flist_bytes": int(self.rows_flist_bytes),
+            "fl_min_count": int(self.fl.min_count),
+            "fl_items": np.asarray(self.fl.items),
+            "fl_supports": np.asarray(self.fl.supports),
+            "C": np.asarray(self.C),
+        }
+        if self.packed is not None:
+            out["packed"] = np.asarray(jax.device_get(self.packed))
+        return out
+
+    @classmethod
+    def from_host(cls, payload: dict, miner: "HPrepostMiner") -> "PreparedDB":
+        """Re-shard a ``to_host`` payload onto ``miner``'s mesh.
+
+        Raises ``ValueError`` when the payload cannot serve on this mesh
+        (schema skew, data-shard count mismatch, or shape/dtype corruption
+        that slipped past the store's digests) — callers treat that as a
+        snapshot miss and re-prepare. Prep stage times come back zeroed:
+        a warm start pays no prep, and results must say so."""
+        try:
+            if int(payload["schema"]) != PREPARED_SCHEMA:
+                raise ValueError(f"PreparedDB snapshot schema {payload['schema']!r} "
+                                 f"!= {PREPARED_SCHEMA}")
+            n_shards = int(payload["n_shards"])
+            if n_shards != miner.D:
+                raise ValueError(
+                    f"snapshot was prepared for {n_shards} data shard(s) but the "
+                    f"mesh has D={miner.D}; per-shard PPC state does not re-shard "
+                    f"— re-prepare on this mesh"
+                )
+            fl = enc.FList(
+                items=np.asarray(payload["fl_items"], np.int32),
+                supports=np.asarray(payload["fl_supports"], np.int64),
+                n_items=int(payload["n_items"]),
+                min_count=int(payload["fl_min_count"]),
+            )
+            width = int(payload["width"])
+            f1_only = bool(payload["f1_only"])
+            C = np.asarray(payload["C"], np.int64)
+            if C.shape != (fl.k, fl.k):
+                raise ValueError(f"snapshot C has shape {C.shape}, expected {(fl.k, fl.k)}")
+            packed = singleton = None
+            if not f1_only and fl.k > 0:
+                ph = np.asarray(payload["packed"], np.int32)
+                want = (n_shards, fl.k, width, 3)
+                if ph.shape != want:
+                    raise ValueError(f"snapshot packed has shape {ph.shape}, expected {want}")
+                packed = miner._shard(ph, P(miner._da, None, None, None))
+                singleton = packed[:, :, :, 2]
+        except (KeyError, TypeError, OverflowError) as e:
+            raise ValueError(f"malformed PreparedDB snapshot payload: {e!r}") from e
+        return cls(
+            fl=fl,
+            n_items=int(payload["n_items"]),
+            n_rows=int(payload["n_rows"]),
+            min_count_floor=int(payload["min_count_floor"]),
+            width=width,
+            packed=packed,
+            singleton_state=singleton,
+            C=C,
+            prep_bytes=int(payload["prep_bytes"]),
+            rows_flist_bytes=int(payload["rows_flist_bytes"]),
+            stage_times={"job1_flist": 0.0, "job2_ppc_pack": 0.0, "f2_scan": 0.0},
+            f1_only=f1_only,
+            n_shards=n_shards,
+        )
 
     def bytes_at(self, min_count: int, n_shards: int) -> int:
         """Per-shard prep footprint attributable to one threshold: rows +
@@ -372,7 +460,7 @@ class HPrepostMiner:
             fl=fl, n_items=n_items, n_rows=R0, min_count_floor=int(min_count_floor),
             width=W, packed=packed, singleton_state=singleton, C=C,
             prep_bytes=prep_bytes, rows_flist_bytes=rows_flist_bytes,
-            stage_times=stages, f1_only=not need_waves,
+            stage_times=stages, f1_only=not need_waves, n_shards=self.D,
         )
 
     def _pack_wave(self, ranks, parents, qarr, level: int, slots_per_shard: int):

@@ -11,6 +11,17 @@ through the engine's planned path — prep stages run once at the loosest
 threshold, every threshold is served from the shared PreparedDB:
 
     PYTHONPATH=src python -m repro.launch.mine --dataset mushroom --sweep 0.4,0.3,0.2
+
+``--snapshot-dir`` binds the persistent PreparedDB store: prep built in
+one process is spilled to disk, and a later process on the same database
+warm-starts with zero prep stages. ``--serve`` routes the request load
+through the resident ``MiningService`` (concurrent submits, batching
+window, cross-group overlap) instead of blocking per call; with
+``--expect-warm`` the run fails unless it was served entirely from
+snapshots (the serve-smoke CI check):
+
+    PYTHONPATH=src python -m repro.launch.mine --serve --snapshot-dir /tmp/snaps \\
+        --dataset mushroom --sweep 0.4,0.3,0.2
 """
 from __future__ import annotations
 
@@ -18,6 +29,67 @@ import argparse
 
 from repro.data import corpus, synth
 from repro.mining import MineSpec, MiningEngine, list_miners
+
+
+def _serve(args, rows, n_items: int, name: str, spec: MineSpec, mesh):
+    """Serve the request load through a resident MiningService: the sweep
+    (or the single threshold) submitted concurrently, plus one
+    host-algorithm request riding the same batch on a worker thread."""
+    from repro.mining.service import MiningService
+
+    fracs = [float(s) for s in args.sweep.split(",")] if args.sweep else [args.min_sup]
+    with MiningService(
+        mesh=mesh, snapshot_dir=args.snapshot_dir, batch_window_s=0.05
+    ) as svc:
+        futures = svc.sweep(rows, n_items, spec, fracs)
+        labels = [f"min_sup={f:g}" for f in fracs]
+        if spec.algorithm != "apriori":
+            futures.append(svc.submit(
+                rows, n_items, spec.with_(algorithm="apriori", min_sup=min(fracs))
+            ))
+            labels.append("apriori (host pool)")
+        svc.drain()
+        results = [f.result() for f in futures]
+        engine = svc.engine
+        print(
+            f"{name}: {len(rows)} tx served as {svc.stats['batches']} batch(es), "
+            f"{svc.stats['requests']} concurrent requests"
+        )
+        for label, res in zip(labels, results):
+            s = res.service_stats
+            extras = [f"queue {s.get('queue_time_s', 0) * 1e3:.1f}ms"]
+            if "prep_source" in s:
+                extras.append(f"prep={s['prep_source']}")
+            if s.get("prep_overlapped"):
+                extras.append("overlapped")
+            print(f"  {label} -> {res.summary()} [{', '.join(extras)}]")
+        info = engine.cache_info()
+        print(
+            f"engine: prepares={engine.stats['prepares']} "
+            f"snapshot_hits={info['snapshot_hits']} "
+            f"scheduler={svc.scheduler.stats}"
+        )
+        if args.expect_warm:
+            # per-request attribution, not just aggregate counters:
+            # stats["prepares"] counts group builds only, so a degraded
+            # per-request rebuild would slip past it — any hprepost result
+            # whose prep was "built" means the warm start did not hold
+            built = [
+                label for label, res in zip(labels, results)
+                if res.algorithm == "hprepost"
+                and res.service_stats.get("prep_source") not in ("snapshot", "cache")
+            ]
+            if (engine.stats["prepares"] != 0 or info["snapshot_hits"] < 1
+                    or info["snapshot_misses"] != 0 or built):
+                raise SystemExit(
+                    f"expected a snapshot warm start but prepares="
+                    f"{engine.stats['prepares']}, snapshot_hits={info['snapshot_hits']}, "
+                    f"snapshot_misses={info['snapshot_misses']}, "
+                    f"non-snapshot requests={built} "
+                    f"(snapshot store: {info.get('snapshot_store')})"
+                )
+            print("warm start verified: zero prep stages, served from snapshots")
+    return results
 
 
 def main(argv=None):
@@ -37,6 +109,21 @@ def main(argv=None):
     ap.add_argument("--patterns", default="all", choices=["all", "closed", "maximal", "top_rank_k"])
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--top", type=int, default=10)
+    ap.add_argument(
+        "--snapshot-dir", default=None, metavar="DIR",
+        help="persistent PreparedDB store: spill prep here and warm-start "
+             "from it (works with and without --serve)",
+    )
+    ap.add_argument(
+        "--serve", action="store_true",
+        help="route requests through the resident MiningService "
+             "(concurrent submits, batching window, cross-group overlap)",
+    )
+    ap.add_argument(
+        "--expect-warm", action="store_true",
+        help="with --serve: fail unless the whole load was served from "
+             "snapshots with zero prep stages (CI warm-start check)",
+    )
     args = ap.parse_args(argv)
 
     from repro.launch.mesh import make_mesh_from_spec
@@ -50,10 +137,14 @@ def main(argv=None):
         rows, n_items = synth.load(args.dataset or "mushroom", scale=args.scale)
         name = args.dataset or "mushroom"
 
-    engine = MiningEngine(make_mesh_from_spec(args.mesh))
+    mesh = make_mesh_from_spec(args.mesh)
     spec = MineSpec(
         algorithm=args.algo, min_sup=args.min_sup, max_k=args.max_k, patterns=args.patterns
     )
+    if args.serve:
+        return _serve(args, rows, n_items, name, spec, mesh)
+
+    engine = MiningEngine(mesh, snapshot_dir=args.snapshot_dir)
     if args.sweep:
         fracs = [float(s) for s in args.sweep.split(",")]
         results = engine.sweep(rows, n_items, spec, fracs)

@@ -18,6 +18,12 @@ FP-growth, Apriori); this package gives them one typed call surface:
 Registered algorithms: ``hprepost`` (the paper's distributed miner),
 ``prepost`` / ``prepost+``, ``fpgrowth``, ``apriori``, ``bruteforce``
 (test oracle). New miners join via ``@register_miner("name")``.
+
+The serving layer lives in ``repro.mining.service`` (re-exported lazily
+from here): ``MiningService`` (submit -> Future, batching window, drain),
+``GroupScheduler`` (cross-group prepare/mine overlap) and
+``SnapshotStore`` (cross-process PreparedDB persistence; also reachable
+as ``MiningEngine(snapshot_dir=...)`` for warm starts without a service).
 """
 from repro.mining.engine import MineRequest, MiningEngine
 from repro.mining import miners as _miners  # noqa: F401  (populates the registry)
@@ -48,15 +54,29 @@ def mine(rows, n_items: int, spec: MineSpec | None = None, **spec_kwargs) -> Min
 
 
 __all__ = [
+    "GroupScheduler",
     "MineSpec",
     "MineResult",
     "MineRequest",
     "Miner",
     "MiningEngine",
+    "MiningService",
     "PATTERN_KINDS",
+    "SnapshotStore",
     "default_mesh",
     "get_miner",
     "list_miners",
     "mine",
     "register_miner",
 ]
+
+
+def __getattr__(name: str):
+    # the serving layer is imported on first touch: it spins thread pools
+    # and cycles back through this package, neither of which belongs in a
+    # bare ``import repro.mining``
+    if name in ("MiningService", "GroupScheduler", "SnapshotStore"):
+        import repro.mining.service as _service
+
+        return getattr(_service, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

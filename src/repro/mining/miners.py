@@ -10,6 +10,7 @@ config so repeated mines through the same frontend (or a
 from __future__ import annotations
 
 import functools
+import threading
 import time
 
 import numpy as np
@@ -183,6 +184,10 @@ class HPrepostFrontend(_MinerBase):
         self.data_axis = data_axis
         self.model_axis = model_axis if model_axis in getattr(self.mesh, "axis_names", ()) else None
         self._miners: dict = {}
+        # the service layer reaches miner_for from its prep thread while
+        # the caller thread serves other requests: one lock, one miner
+        # (and one set of jitted programs) per device config
+        self._miners_lock = threading.Lock()
         self.miners_built = 0
 
     def _device_config(self, spec: MineSpec):
@@ -206,12 +211,13 @@ class HPrepostFrontend(_MinerBase):
         from repro.core.hprepost import HPrepostMiner
 
         cfg = self._device_config(spec)
-        miner = self._miners.get(cfg)
-        if miner is None:
-            miner = self._miners[cfg] = HPrepostMiner(
-                self.mesh, data_axis=self.data_axis, model_axis=self.model_axis, config=cfg
-            )
-            self.miners_built += 1
+        with self._miners_lock:
+            miner = self._miners.get(cfg)
+            if miner is None:
+                miner = self._miners[cfg] = HPrepostMiner(
+                    self.mesh, data_axis=self.data_axis, model_axis=self.model_axis, config=cfg
+                )
+                self.miners_built += 1
         return miner
 
     def _run(self, rows, n_items, min_count, spec):

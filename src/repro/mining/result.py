@@ -40,6 +40,13 @@ class MineResult:
     # consumers carry 0.0 for those keys (honest attribution, no double
     # counting when summing stage times across a sweep).
     prep_shared: bool = False
+    # Serving-layer telemetry, filled by whoever routed the request:
+    #   prep_source      "built" | "cache" | "snapshot" (engine)
+    #   prep_overlapped  True when this group's prepare ran while an earlier
+    #                    group was still mining (scheduler)
+    #   queue_time_s     submit -> batch-execution-start (service)
+    #   batch_size       requests coalesced into this request's batch (service)
+    service_stats: dict = dataclasses.field(default_factory=dict)
 
     def support_of(self, itemset) -> int:
         return self.itemsets[tuple(sorted(int(i) for i in itemset))]

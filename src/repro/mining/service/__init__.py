@@ -1,0 +1,34 @@
+"""repro.mining.service — the resident mining service layer.
+
+Three modules on top of ``MiningEngine`` (the ROADMAP's serving
+follow-ups, done):
+
+  ``store``      cross-process persistence: a content-addressed on-disk
+                 snapshot store of serialized PreparedDBs, so a cold
+                 process warm-starts with zero prep stages
+  ``scheduler``  async execution across *groups*: group g+1's prepare is
+                 dispatched while group g's wave loop drains; host
+                 algorithms run on worker threads alongside device groups
+  ``service``    the ``MiningService`` facade: ``submit() -> Future``, a
+                 batching window that coalesces concurrent requests into
+                 planned groups, graceful drain, per-request telemetry
+
+``MiningService``/``GroupScheduler`` are imported lazily: the engine
+itself constructs a ``SnapshotStore`` (warm-start hooks), and an eager
+import here would cycle back through ``repro.mining.engine``.
+"""
+from repro.mining.service.store import SnapshotStore
+
+__all__ = ["GroupScheduler", "MiningService", "SnapshotStore"]
+
+
+def __getattr__(name: str):
+    if name == "MiningService":
+        from repro.mining.service.service import MiningService
+
+        return MiningService
+    if name == "GroupScheduler":
+        from repro.mining.service.scheduler import GroupScheduler
+
+        return GroupScheduler
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

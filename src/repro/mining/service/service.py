@@ -1,0 +1,182 @@
+"""MiningService: the resident serving facade over engine + scheduler.
+
+The paper's HPrepost amortizes MapReduce job setup across many queries on
+one long-lived cluster; this is that posture as a process-local service.
+One worker thread owns execution: ``submit`` enqueues a request and
+returns a ``concurrent.futures.Future`` immediately, the worker coalesces
+every request that arrives within a small batching window into one batch,
+and the batch is planned into shared-prep groups and executed with
+cross-group overlap by the ``GroupScheduler``. With a ``snapshot_dir``
+bound, the engine underneath warm-starts from (and spills to) the
+persistent PreparedDB store, so a freshly started service serves a known
+database with zero prep stages.
+
+Telemetry rides each ``MineResult.service_stats``: queue time, batch
+size, where the prep came from (built / LRU cache / snapshot) and whether
+it overlapped an earlier group's mining. ``drain()`` blocks until every
+accepted request has resolved; ``close()`` drains and stops the worker
+(also available as a context manager).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Sequence
+
+from repro.mining.engine import MineRequest, MiningEngine
+from repro.mining.service.scheduler import GroupScheduler
+from repro.mining.spec import MineSpec
+
+
+@dataclasses.dataclass
+class _Pending:
+    req: MineRequest
+    future: Future
+    submitted_at: float
+
+
+class MiningService:
+    """Async front-door: ``submit() -> Future[MineResult]``.
+
+    ``batch_window_s`` is the coalescing window: once a request arrives,
+    the worker keeps collecting for that long so concurrent callers land
+    in one planned batch (sweep requests on one database become one
+    shared-prep group; distinct databases become pipelined groups). 0
+    serves strictly one request per batch.
+    """
+
+    def __init__(self, engine: MiningEngine | None = None, *, mesh=None,
+                 snapshot_dir: str | None = None, batch_window_s: float = 0.02,
+                 host_workers: int = 4, **engine_kwargs):
+        if engine is not None and (mesh is not None or snapshot_dir is not None or engine_kwargs):
+            raise ValueError("pass an engine or engine-construction kwargs, not both")
+        self.engine = engine if engine is not None else MiningEngine(
+            mesh, snapshot_dir=snapshot_dir, **engine_kwargs
+        )
+        self.scheduler = GroupScheduler(self.engine, host_workers=host_workers)
+        self.batch_window_s = float(batch_window_s)
+        self.stats = {"requests": 0, "batches": 0, "max_batch": 0}
+        self._q: queue.SimpleQueue = queue.SimpleQueue()
+        self._cv = threading.Condition()
+        self._outstanding = 0
+        self._closed = False
+        self._worker = threading.Thread(
+            target=self._loop, name="mining-service", daemon=True
+        )
+        self._worker.start()
+
+    # ------------------------------------------------------------ submission
+    def submit(self, rows, n_items: int, spec: MineSpec) -> Future:
+        """Enqueue one request; the Future resolves to its ``MineResult``
+        (or raises what the request raised)."""
+        fut: Future = Future()
+        with self._cv:
+            # the closed check and the accounting are one atomic step:
+            # close() flips the flag under the same lock, so a request is
+            # either rejected here or counted before close()'s drain runs
+            if self._closed:
+                raise RuntimeError("MiningService is closed")
+            self._outstanding += 1
+            self.stats["requests"] += 1
+        self._q.put(_Pending(MineRequest(rows, n_items, spec), fut, time.monotonic()))
+        return fut
+
+    def submit_many(self, requests: Sequence[MineRequest]) -> list[Future]:
+        return [self.submit(r.rows, r.n_items, r.spec) for r in requests]
+
+    def sweep(self, rows, n_items: int, spec: MineSpec,
+              min_sups: Sequence[float]) -> list[Future]:
+        """The paper's threshold sweep, submitted concurrently — the batch
+        window coalesces it into one shared-prep group."""
+        return [self.submit(rows, n_items, spec.with_(min_sup=s)) for s in min_sups]
+
+    # ------------------------------------------------------------- lifecycle
+    def drain(self) -> None:
+        """Block until every accepted request has resolved."""
+        with self._cv:
+            self._cv.wait_for(lambda: self._outstanding == 0)
+
+    def close(self) -> None:
+        """Graceful shutdown: stop accepting, drain, stop the worker."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+        self.drain()
+        self._q.put(None)  # wake + stop the worker
+        self._worker.join()
+        self.scheduler.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ---------------------------------------------------------- worker loop
+    def _loop(self) -> None:
+        while True:
+            try:
+                first = self._q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            if first is None:
+                return
+            batch = [first]
+            deadline = time.monotonic() + self.batch_window_s
+            stop = False
+            while True:
+                timeout = deadline - time.monotonic()
+                if timeout <= 0:
+                    break
+                try:
+                    item = self._q.get(timeout=timeout)
+                except queue.Empty:
+                    break
+                if item is None:
+                    stop = True
+                    break
+                batch.append(item)
+            self._serve(batch)
+            if stop:
+                return
+
+    def _serve(self, batch: list[_Pending]) -> None:
+        t_start = time.monotonic()
+        # transition every future to RUNNING; one the caller already
+        # cancelled is dropped here (set_result on it would raise
+        # InvalidStateError and kill the worker), and RUNNING futures can
+        # no longer be cancelled out from under the batch
+        live = []
+        for p in batch:
+            if p.future.set_running_or_notify_cancel():
+                live.append(p)
+            else:
+                with self._cv:
+                    self._outstanding -= 1
+                    self._cv.notify_all()
+        batch = live
+        if not batch:
+            return
+        self.stats["batches"] += 1
+        self.stats["max_batch"] = max(self.stats["max_batch"], len(batch))
+        try:
+            results = self.scheduler.run(
+                [p.req for p in batch], return_exceptions=True
+            )
+        except BaseException as e:  # scheduler must not fail a batch silently
+            results = [e] * len(batch)
+        for p, res in zip(batch, results):
+            if isinstance(res, BaseException):
+                p.future.set_exception(res)
+            else:
+                res.service_stats.update(
+                    queue_time_s=t_start - p.submitted_at, batch_size=len(batch)
+                )
+                p.future.set_result(res)
+            with self._cv:
+                self._outstanding -= 1
+                self._cv.notify_all()

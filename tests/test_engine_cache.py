@@ -165,3 +165,47 @@ def test_different_device_config_is_a_different_entry():
     eng.submit(rows, n_items, SPEC.with_(candidate_unit=16))
     info = eng.cache_info()
     assert info["entries"] == 2 and info["misses"] == 2 and info["hits"] == 0
+
+
+# ---------------------------------------------- fingerprint memoization
+def test_fingerprint_memoized_per_array_identity(monkeypatch):
+    rows, n_items = _db(12)
+    eng = MiningEngine()
+    digests = []
+    real = MiningEngine._digest
+    monkeypatch.setattr(
+        MiningEngine, "_digest",
+        staticmethod(lambda arr: digests.append(1) or real(arr)),
+    )
+    eng.submit(rows, n_items, SPEC)
+    eng.submit(rows, n_items, SPEC.with_(min_sup=0.35))
+    eng.sweep(rows, n_items, SPEC, [0.4, 0.35])
+    assert len(digests) == 1  # the resident DB was hashed exactly once
+    # same content in a different array object: re-hashed, same cache entry
+    eng.submit(rows.copy(), n_items, SPEC)
+    assert len(digests) == 2
+    assert eng.cache_info()["entries"] == 1
+
+
+def test_fingerprint_memo_invalidation_story():
+    rows, n_items = _db(13)
+    eng = MiningEngine()
+    fp1 = eng._fingerprint(rows)
+    assert eng._fingerprint(rows) == fp1 and len(eng._fp_memo) == 1
+
+    # the documented escape hatch for in-place mutation
+    rows[0, 0] = (rows[0, 0] + 1) % n_items
+    eng.invalidate_fingerprints(rows)
+    fp2 = eng._fingerprint(rows)
+    assert fp2 != fp1
+
+    # a dead array's memo slot can never serve a recycled id: the weakref
+    # guard forces a re-hash for any new object, whatever id() it got
+    ident = id(rows)
+    del rows
+    other = np.full((3, 2), 1, np.int32)
+    fp3 = eng._fingerprint(other)
+    assert fp3 != fp2 and fp3[0] == (3, 2)
+    eng.invalidate_fingerprints()
+    assert not eng._fp_memo
+    del ident

@@ -1,0 +1,229 @@
+"""The resident mining service: async group scheduler + MiningService.
+
+Anchors: scheduler results are itemset-identical to independent submits
+(whatever the overlap did), overlap attribution is honest (group g+1's
+prepare marked overlapped only when it ran while group g mined), host
+algorithms ride worker threads in the same batch, and the service facade
+batches concurrent submits, isolates per-request failures, and drains
+cleanly.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.synth import random_db
+from repro.mining import MineRequest, MineSpec, MiningEngine
+from repro.mining.service import GroupScheduler, MiningService
+
+SPEC = MineSpec(algorithm="hprepost", max_k=4, candidate_unit=8, min_sup=0.3,
+                nlist_width=16)
+
+
+def _db(seed=0, n_tx=60, n_items=10):
+    return random_db(np.random.default_rng(seed), n_tx, n_items, 6), n_items
+
+
+# ------------------------------------------------------------- scheduler
+def test_scheduler_matches_independent_submits_across_groups():
+    rows_a, n_items = _db(0)
+    rows_b, _ = _db(1)
+    reqs = [
+        MineRequest(rows_a, n_items, SPEC.with_(min_sup=0.4)),
+        MineRequest(rows_a, n_items, SPEC.with_(min_sup=0.25)),
+        MineRequest(rows_b, n_items, SPEC.with_(min_sup=0.3)),
+        MineRequest(rows_a, n_items, MineSpec(algorithm="fpgrowth", min_sup=0.3, max_k=4)),
+        MineRequest(rows_b, n_items, MineSpec(algorithm="apriori", min_sup=0.3, max_k=4)),
+    ]
+    eng = MiningEngine()
+    with GroupScheduler(eng) as sched:
+        out = sched.run(reqs)
+    assert sched.stats["device_groups"] == 2 and sched.stats["host_requests"] == 2
+    fresh = MiningEngine()
+    for r, res in zip(reqs, out):
+        assert res.algorithm == r.spec.algorithm
+        assert res.itemsets == fresh.submit(r.rows, r.n_items, r.spec).itemsets
+    # both sweeps were planned: one prepare per distinct database
+    assert eng.stats["prepares"] == 2
+
+
+def test_scheduler_overlap_attribution_and_counters():
+    rows_a, n_items = _db(2)
+    rows_b, _ = _db(3)
+    eng = MiningEngine()
+    with GroupScheduler(eng) as sched:
+        out = sched.run([
+            MineRequest(rows_a, n_items, SPEC),
+            MineRequest(rows_b, n_items, SPEC),
+        ])
+    # group 0's prepare had nothing to hide under; group 1's ran while
+    # group 0 was mining
+    assert out[0].service_stats["prep_overlapped"] is False
+    assert out[1].service_stats["prep_overlapped"] is True
+    assert sched.stats["overlapped_prepares"] == 1
+    # cache hits are never "overlapped prepares": rerun the same batch
+    with GroupScheduler(eng) as sched2:
+        out2 = sched2.run([
+            MineRequest(rows_a, n_items, SPEC),
+            MineRequest(rows_b, n_items, SPEC),
+        ])
+    assert sched2.stats["overlapped_prepares"] == 0
+    assert all(r.service_stats["prep_source"] == "cache" for r in out2)
+
+
+def test_scheduler_sequential_mode_matches_overlapped():
+    rows_a, n_items = _db(4)
+    rows_b, _ = _db(5)
+    reqs = [
+        MineRequest(rows_a, n_items, SPEC.with_(min_sup=0.25)),
+        MineRequest(rows_b, n_items, SPEC.with_(min_sup=0.25)),
+    ]
+    with GroupScheduler(MiningEngine(), overlap=False) as seq:
+        a = seq.run(list(reqs))
+    with GroupScheduler(MiningEngine()) as ovl:
+        b = ovl.run(list(reqs))
+    assert seq.stats["overlapped_prepares"] == 0
+    for x, y in zip(a, b):
+        assert x.itemsets == y.itemsets
+
+
+def test_scheduler_group_guard_degrades_per_request():
+    from repro.core.encoding import pad_transactions
+
+    # loose floor trips max_f1 (K=10 > 6); the tight request alone passes
+    tx = [[0, 1, 2, 3, 4, 5]] * 8 + [[6, 7, 8, 9]] * 2
+    rows = pad_transactions(tx)
+    spec = SPEC.with_(max_f1=6, nlist_width=None)
+    eng = MiningEngine()
+    with GroupScheduler(eng) as sched:
+        out = sched.run(
+            [MineRequest(rows, 10, spec.with_(min_sup=0.5)),
+             MineRequest(rows, 10, spec.with_(min_sup=0.2))],
+            return_exceptions=True,
+        )
+    assert sched.stats["degraded_groups"] == 1
+    assert out[0].itemsets  # the feasible request still answered
+    assert isinstance(out[1], ValueError)  # the infeasible one failed alone
+
+
+def test_scheduler_error_isolation_as_values_or_raise():
+    rows, n_items = _db(6)
+    bad = MineRequest(rows, n_items,
+                      MineSpec(algorithm="prepost+", min_sup=0.3, patterns="closed"))
+    good = MineRequest(rows, n_items, SPEC)
+    with GroupScheduler(MiningEngine()) as sched:
+        out = sched.run([bad, good], return_exceptions=True)
+        assert isinstance(out[0], ValueError)  # CPE subset can't do closed
+        assert out[1].itemsets
+        with pytest.raises(ValueError):
+            sched.run([bad, good])
+
+
+# --------------------------------------------------------------- service
+def test_service_coalesces_concurrent_submits_into_one_planned_batch():
+    rows, n_items = _db(7)
+    with MiningService(batch_window_s=0.25) as svc:
+        futs = svc.sweep(rows, n_items, SPEC, [0.4, 0.3, 0.2])
+        svc.drain()
+        out = [f.result() for f in futs]
+        assert svc.stats["batches"] == 1 and svc.stats["max_batch"] == 3
+        assert svc.engine.stats["prepares"] == 1  # one group, prep once
+    fresh = MiningEngine()
+    for frac, res in zip([0.4, 0.3, 0.2], out):
+        assert res.itemsets == fresh.submit(rows, n_items, SPEC.with_(min_sup=frac)).itemsets
+        assert res.service_stats["batch_size"] == 3
+        assert res.service_stats["queue_time_s"] >= 0.0
+
+
+def test_service_telemetry_and_mixed_algorithms():
+    rows, n_items = _db(8)
+    with MiningService(batch_window_s=0.2) as svc:
+        f1 = svc.submit(rows, n_items, SPEC)
+        f2 = svc.submit(rows, n_items, MineSpec(algorithm="apriori", min_sup=0.3, max_k=4))
+        r1, r2 = f1.result(timeout=120), f2.result(timeout=120)
+    assert r1.itemsets == r2.itemsets  # same db, same threshold, same answer
+    assert r1.service_stats["prep_source"] == "built"
+    assert "prep_overlapped" in r1.service_stats
+    assert r2.service_stats["batch_size"] == r1.service_stats["batch_size"]
+
+
+def test_service_per_request_failure_does_not_poison_the_batch():
+    rows, n_items = _db(9)
+    with MiningService(batch_window_s=0.2) as svc:
+        bad = svc.submit(rows, n_items,
+                         MineSpec(algorithm="prepost+", min_sup=0.3, patterns="maximal"))
+        good = svc.submit(rows, n_items, SPEC)
+        with pytest.raises(ValueError):
+            bad.result(timeout=120)
+        assert good.result(timeout=120).itemsets
+
+
+def test_service_warm_starts_from_snapshot_dir(tmp_path):
+    rows, n_items = _db(10)
+    with MiningService(snapshot_dir=str(tmp_path), batch_window_s=0.05) as svc:
+        ref = [f.result(timeout=120) for f in svc.sweep(rows, n_items, SPEC, [0.4, 0.3])]
+    with MiningService(snapshot_dir=str(tmp_path), batch_window_s=0.05) as svc2:
+        out = [f.result(timeout=120) for f in svc2.sweep(rows, n_items, SPEC, [0.4, 0.3])]
+        assert svc2.engine.stats["prepares"] == 0
+        assert svc2.engine.cache_info()["snapshot_hits"] == 1
+    for a, b in zip(ref, out):
+        assert a.itemsets == b.itemsets
+        assert b.service_stats["prep_source"] == "snapshot"
+
+
+def test_service_drain_close_and_submit_after_close():
+    rows, n_items = _db(11)
+    svc = MiningService(batch_window_s=0.01)
+    futs = [svc.submit(rows, n_items, SPEC.with_(min_sup=s)) for s in (0.4, 0.3)]
+    svc.drain()
+    assert all(f.done() for f in futs)
+    svc.close()
+    svc.close()  # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(rows, n_items, SPEC)
+
+
+def test_service_cancelled_future_neither_kills_worker_nor_blocks_drain():
+    rows, n_items = _db(14)
+    with MiningService(batch_window_s=0.3) as svc:
+        doomed = svc.submit(rows, n_items, SPEC)
+        live = svc.submit(rows, n_items, SPEC.with_(min_sup=0.25))
+        assert doomed.cancel()  # still queued: cancellable
+        svc.drain()  # must account the cancelled slot, not hang on it
+        assert doomed.cancelled()
+        res = live.result(timeout=120)
+        assert res.itemsets
+        assert res.service_stats["batch_size"] == 1  # cancelled slot dropped
+        # the worker survived: the service still serves
+        assert svc.submit(rows, n_items, SPEC).result(timeout=120).itemsets
+
+
+def test_service_threaded_producers_all_resolve():
+    rows_a, n_items = _db(12)
+    rows_b, _ = _db(13)
+    futs, lock = [], threading.Lock()
+
+    def producer(rows, fracs, svc):
+        for s in fracs:
+            f = svc.submit(rows, n_items, SPEC.with_(min_sup=s))
+            with lock:
+                futs.append((rows, s, f))
+            time.sleep(0.002)
+
+    with MiningService(batch_window_s=0.05) as svc:
+        threads = [
+            threading.Thread(target=producer, args=(rows_a, (0.4, 0.3, 0.25), svc)),
+            threading.Thread(target=producer, args=(rows_b, (0.35, 0.3, 0.25), svc)),
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        svc.drain()
+        assert svc.stats["requests"] == 6
+        fresh = MiningEngine()
+        for rows, s, f in futs:
+            assert f.result(timeout=120).itemsets == fresh.submit(
+                rows, n_items, SPEC.with_(min_sup=s)
+            ).itemsets
