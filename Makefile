@@ -5,21 +5,28 @@
 #                       kernel parity (tests/test_kernels.py, incl. the fused
 #                       intersect+support sweeps) runs first for fast signal
 #   make bench-smoke  - paper-figure benchmark at tiny scale (sanity, not numbers)
-#   make bench-json   - emit the BENCH_PR4.json perf trajectory (kernel micro-
-#                       bench + service overlap/warm-start rows) for future PRs
-#                       to diff; earlier trajectories (BENCH_PR3.json) stay put
+#   make bench-json   - emit the BENCH_PR5.json perf trajectory (kernel micro-
+#                       bench + service overlap/warm-start rows + streaming
+#                       append/query/compaction rows) for future PRs to diff;
+#                       earlier trajectories (BENCH_PR3/4.json) stay put
 #   make mine-smoke   - every CLI-selectable miner on a small synth dataset
 #   make serve-smoke  - MiningService end-to-end: concurrent submits incl. a
 #                       sweep + a host-algorithm request, drain, then a second
 #                       process that must warm-start from the snapshot store
 #                       with zero prep stages
+#   make stream-smoke - streaming ingestion end-to-end: append 3 batches in
+#                       one process (each preps only its own segment), then a
+#                       second process replays the append log and must
+#                       warm-start every segment from the snapshot dir with
+#                       zero prep stages
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 SERVE_SNAP := .serve-smoke-snapshots
+STREAM_SNAP := .stream-smoke-snapshots
 
-.PHONY: test test-tier1 bench-smoke bench-json mine-smoke serve-smoke
+.PHONY: test test-tier1 bench-smoke bench-json mine-smoke serve-smoke stream-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -46,3 +53,11 @@ serve-smoke:
 	$(PY) -m repro.launch.mine --serve --snapshot-dir $(SERVE_SNAP) \
 		--dataset mushroom --scale 0.05 --sweep 0.4,0.3,0.2 --max-k 4 --expect-warm
 	rm -rf $(SERVE_SNAP)
+
+stream-smoke:
+	rm -rf $(STREAM_SNAP)
+	$(PY) -m repro.launch.mine --append 3 --snapshot-dir $(STREAM_SNAP) \
+		--dataset mushroom --scale 0.05 --sweep 0.4,0.3 --max-k 4
+	$(PY) -m repro.launch.mine --append 3 --snapshot-dir $(STREAM_SNAP) \
+		--dataset mushroom --scale 0.05 --sweep 0.4,0.3 --max-k 4 --expect-warm
+	rm -rf $(STREAM_SNAP)

@@ -19,26 +19,29 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
-BENCH_PR = 4  # this PR's trajectory tag: emit_json writes BENCH_PR<n>.json
+BENCH_PR = 5  # this PR's trajectory tag: emit_json writes BENCH_PR<n>.json
 
 
 def emit_json(path: str | None = None, records=None, pr: int = BENCH_PR) -> str:
     """Write the machine-readable perf trajectory: kernel micro-bench rows,
     the host wave-planning vec-vs-loop comparison, end-to-end miner timings
-    through one warm ``MiningEngine``, and the service rows (cross-group
-    overlap + snapshot warm-start). Future PRs diff their own emit against
-    this file instead of re-deriving a baseline.
+    through one warm ``MiningEngine``, the service rows (cross-group
+    overlap + snapshot warm-start), and the streaming rows (append
+    throughput vs full rebuild, segmented query latency, compaction cost).
+    Future PRs diff their own emit against this file instead of re-deriving
+    a baseline.
 
     The output name is parameterized by ``pr`` (default: this PR), so each
     PR's trajectory lands in its own ``BENCH_PR<n>.json`` instead of
     overwriting its predecessor's."""
     from benchmarks.bench_kernels import run as kernels_run
     from benchmarks.bench_service import run as service_run
+    from benchmarks.bench_stream import run as stream_run
 
     if path is None:
         path = os.path.join(os.path.dirname(__file__), "..", f"BENCH_PR{pr}.json")
     if records is None:
-        records = kernels_run() + service_run(quick=True)
+        records = kernels_run() + service_run(quick=True) + stream_run(quick=True)
     payload = {
         "schema": "bench-trajectory-v1",
         "pr": pr,
@@ -75,9 +78,10 @@ def main() -> None:
         print(f"fig7-10_memory_prepost_{tag},0,{r['prepost_bytes']}B")
         print(f"fig7-10_memory_fpgrowth_{tag},0,{r['fpgrowth_bytes']}B")
 
-    # --- kernels + service (one BENCH_PR<n>.json trajectory from this run)
+    # --- kernels + service + streaming (one BENCH_PR<n>.json trajectory)
     from benchmarks.bench_kernels import run as kernels_run
     from benchmarks.bench_service import run as service_run
+    from benchmarks.bench_stream import run as stream_run
 
     recs = kernels_run()
     for name, us, note in recs:
@@ -85,7 +89,10 @@ def main() -> None:
     srecs = service_run(quick=args.quick)
     for name, us, note in srecs:
         print(f"{name},{us:.0f},{note}")
-    emit_json(records=recs + srecs)
+    trecs = stream_run(quick=args.quick)
+    for name, us, note in trecs:
+        print(f"{name},{us:.0f},{note}")
+    emit_json(records=recs + srecs + trecs)
 
     # --- scaling (subprocesses with fake devices)
     if not args.skip_scaling:

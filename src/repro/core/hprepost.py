@@ -99,6 +99,12 @@ class PreparedDB:
     stage_times: dict[str, float]  # job1_flist / job2_ppc_pack / f2_scan
     f1_only: bool = False  # True when built with need_waves=False
     n_shards: int = 1  # data-shard count (D) this prep was laid out for
+    # False when the F-list order was imposed externally (``prepare(...,
+    # flist=...)`` — the streaming path's shared global item order) instead
+    # of derived support-descending from this database. Such preps are
+    # segment building blocks for ``mine_prepared_segments``; the prefix
+    # arithmetic ``mine_prepared`` leans on does not hold for them.
+    support_ordered: bool = True
 
     def to_host(self) -> dict:
         """Gather the prep to a host payload (plain numpy + scalars) for
@@ -113,6 +119,7 @@ class PreparedDB:
             "min_count_floor": int(self.min_count_floor),
             "width": int(self.width),
             "f1_only": bool(self.f1_only),
+            "support_ordered": bool(self.support_ordered),
             "n_shards": int(self.n_shards),
             "prep_bytes": int(self.prep_bytes),
             "rows_flist_bytes": int(self.rows_flist_bytes),
@@ -180,6 +187,8 @@ class PreparedDB:
             stage_times={"job1_flist": 0.0, "job2_ppc_pack": 0.0, "f2_scan": 0.0},
             f1_only=f1_only,
             n_shards=n_shards,
+            # pre-PR5 snapshots carry no key: they were all support-ordered
+            support_ordered=bool(payload.get("support_ordered", True)),
         )
 
     def bytes_at(self, min_count: int, n_shards: int) -> int:
@@ -197,6 +206,25 @@ class PreparedDB:
     def k_active(self, min_count: int) -> int:
         """|F1| at ``min_count`` — a prefix length of the floor F-list."""
         return int(np.count_nonzero(np.asarray(self.fl.supports) >= min_count))
+
+
+@dataclasses.dataclass
+class SegmentHandle:
+    """One segment's device state, ready for cross-segment wave execution.
+
+    ``packed``/``singleton`` are the segment's N-list buffers with one extra
+    all-invalid *sentinel* rank row appended (``extend_with_sentinel``);
+    ``g2l`` maps every global stream rank to the segment's local rank, with
+    ranks absent from the segment mapped to the sentinel. The kernel's
+    padding semantics (``pre=INF, post=-1, cnt=0`` never subsumes and
+    contributes zero) make a sentinel gather an exact empty N-list, so a
+    candidate touching an item the segment never saw reports support 0
+    there — precisely its contribution to the global (additive) support.
+    """
+
+    packed: Any  # (D, K_s + 1, W_s, 3) device N-lists incl. sentinel row
+    singleton: Any  # packed[..., 2] — the segment's level-2 bootstrap
+    g2l: np.ndarray  # (K_global,) int32: stream rank -> local rank | K_s
 
 
 def _pow2(n: int) -> int:
@@ -383,14 +411,24 @@ class HPrepostMiner:
         return max(self.M, 1) if (self.cfg.partition_candidates and self.model_axis) else 1
 
     def prepare(
-        self, rows: np.ndarray, n_items: int, min_count_floor: int, *, need_waves: bool = True
+        self, rows: np.ndarray, n_items: int, min_count_floor: int, *,
+        need_waves: bool = True, flist: enc.FList | None = None,
     ) -> PreparedDB:
         """Run every threshold-floor stage once: Job 1 (histogram/F-list),
         Job 2 (PPC-tree), N-list pack, F2 scan. The result serves any
         ``mine_prepared`` at ``min_count >= min_count_floor``.
 
         ``need_waves=False`` stops after the F-list (for ``max_k == 1``
-        traffic, where the tree/N-lists are never consulted)."""
+        traffic, where the tree/N-lists are never consulted).
+
+        ``flist`` imposes an external item order instead of deriving it
+        support-descending from this database — the streaming path's global
+        stream order, which every segment must share so cross-segment
+        N-list ancestor relations agree (PrePost correctness needs one
+        consistent total order, not specifically the support order). Job 1
+        is skipped then (the caller already counted the batch), and the
+        result is marked ``support_ordered=False``: it can only be mined
+        through ``mine_prepared_segments``."""
         cfg = self.cfg
         stages: dict[str, float] = {}
         t0 = time.perf_counter()
@@ -415,9 +453,16 @@ class HPrepostMiner:
         rows_p[:R0] = rows
         rows_sharded = self._shard(rows_p, P(self._da, None))
 
-        supports = np.asarray(jax.device_get(self._job1(rows_sharded, n_items=n_items)))
-        self.stage_counters["job1"] += 1
-        fl = enc.build_flist(supports, min_count_floor)
+        if flist is None:
+            supports = np.asarray(jax.device_get(self._job1(rows_sharded, n_items=n_items)))
+            self.stage_counters["job1"] += 1
+            fl = enc.build_flist(supports, min_count_floor)
+        else:
+            if flist.n_items != n_items:
+                raise ValueError(
+                    f"imposed flist covers {flist.n_items} items, database has {n_items}"
+                )
+            fl = flist
         stages["job1_flist"] = time.perf_counter() - t0
         K = fl.k
         if K > cfg.max_f1:
@@ -461,6 +506,7 @@ class HPrepostMiner:
             width=W, packed=packed, singleton_state=singleton, C=C,
             prep_bytes=prep_bytes, rows_flist_bytes=rows_flist_bytes,
             stage_times=stages, f1_only=not need_waves, n_shards=self.D,
+            support_ordered=flist is None,
         )
 
     def _pack_wave(self, ranks, parents, qarr, level: int, slots_per_shard: int):
@@ -555,6 +601,12 @@ class HPrepostMiner:
         """
         cfg = self.cfg
         max_k = cfg.max_k if max_k is ... else max_k
+        if not prepared.support_ordered:
+            raise ValueError(
+                "PreparedDB was built with an imposed (stream-order) F-list; "
+                "its F-list is not a support-descending prefix structure — "
+                "mine it through mine_prepared_segments"
+            )
         if min_count < prepared.min_count_floor:
             raise ValueError(
                 f"min_count={min_count} is looser than the PreparedDB floor "
@@ -654,6 +706,160 @@ class HPrepostMiner:
                     kept = surv_mask[d_parents]
                     d_ranks, d_slot_of = d_ranks[kept], d_slot_of[kept]
                 pending = (d_ranks, d_slot_of, d_sups)
+                ranks, parents, qarr = self._extensions(
+                    d_ranks, d_slot_of, pair_packed, prefix_packed, K
+                )
+            elif surv_mask is not None and not cfg.pipeline_waves:
+                ranks, parents, qarr = self._extensions(
+                    surv_ranks, surv_slots, pair_packed, prefix_packed, K
+                )
+            else:
+                ranks = np.empty((0, 2), np.int32)
+                parents = np.empty(0, np.int64)
+                qarr = np.empty(0, np.int32)
+
+        stages["mining_waves"] = time.perf_counter() - t0
+        return PrepostResult(itemsets, flist_items, len(itemsets), len(itemsets), peak)
+
+    def extend_with_sentinel(self, prepared: PreparedDB):
+        """``(packed_ext, singleton_ext)``: the prepared N-list buffers with
+        one all-invalid rank row appended at index ``K_s`` — the slot
+        ``SegmentHandle.g2l`` routes globally-known-but-locally-absent items
+        to. Re-device_put keeps the per-shard layout explicit."""
+        if prepared.packed is None:
+            raise ValueError("cannot extend an F1-only PreparedDB (no N-lists packed)")
+        pad = np.broadcast_to(
+            np.array([INF32, -1, 0], np.int32), (self.D, 1, prepared.width, 3)
+        )
+        ext = jnp.concatenate([prepared.packed, jnp.asarray(pad)], axis=1)
+        ext = jax.device_put(ext, NamedSharding(self.mesh, P(self._da, None, None, None)))
+        return ext, ext[:, :, :, 2]
+
+    def mine_prepared_segments(
+        self,
+        handles: "list[SegmentHandle]",
+        items: np.ndarray,
+        supports: np.ndarray,
+        C: np.ndarray,
+        min_count: int,
+        *,
+        max_k: int | None | type(Ellipsis) = ...,
+        peak_base: int = 0,
+    ) -> PrepostResult:
+        """The k>2 wave loop over a *segmented* database (the streaming
+        reduce step): candidates are planned once against the global
+        F-lists (``items``/``supports`` in stream-rank order, ``C`` the
+        summed upper-triangular F2 matrix in the same rank space), each
+        wave launches the fused intersect kernel once per segment, and the
+        per-candidate supports are summed across segments before
+        thresholding — exact because segments partition the transactions,
+        so itemset supports are additive over them.
+
+        Every segment carries its own merged-N-list state chain between
+        waves (a segment is one partition's PPC forest); the *slot* layout
+        (``_pack_wave``) is global and shared, so parent gathers at levels
+        > 2 need no per-segment translation — only base/extension item
+        indices (and the level-2 singleton parents) route through each
+        segment's ``g2l``. Pipelining semantics match ``mine_prepared``.
+        """
+        cfg = self.cfg
+        max_k = cfg.max_k if max_k is ... else max_k
+        items_arr = np.asarray(items, np.int32)
+        supports = np.asarray(supports, np.int64)
+        K = len(items_arr)
+        stages = self.last_stage_times = {
+            "job1_flist": 0.0, "job2_ppc_pack": 0.0, "f2_scan": 0.0, "mining_waves": 0.0
+        }
+        itemsets: dict[tuple[int, ...], int] = {}
+        freq = supports >= min_count
+        # result F-list stays support-descending (ties: item asc) whatever
+        # the stream-rank order is — the contract every miner reports
+        f_items = items_arr[freq]
+        f_sups = supports[freq]
+        order = np.lexsort((f_items, -f_sups))
+        flist_items = f_items[order]
+        for it, s in zip(flist_items.tolist(), f_sups[order].tolist()):
+            itemsets[(int(it),)] = int(s)
+        peak = int(peak_base)
+        if K == 0 or max_k == 1 or not itemsets or not handles:
+            return PrepostResult(itemsets, flist_items, len(itemsets), len(itemsets), peak)
+
+        pair_ok = (C + C.T) >= min_count
+        pair_packed = np.packbits(pair_ok, axis=1)
+        prefix_packed = np.packbits(np.tri(K, K, -1, dtype=bool), axis=1)
+        prev_states = [h.singleton for h in handles]
+        qs, ps = np.nonzero(C >= min_count)
+        ranks = np.stack([qs, ps], axis=1).astype(np.int32)
+        parents = ps.astype(np.int64)
+        qarr = qs.astype(np.int32)
+        level = 2
+        Mb = self._Mb
+        slots_per_shard = 0
+        pending = None  # (ranks, slot_of, [per-segment device supports])
+
+        t0 = time.perf_counter()
+        while len(ranks) or pending is not None:
+            dispatched = None
+            if len(ranks) and (max_k is None or level <= max_k) and len(itemsets) < cfg.max_itemsets:
+                parent_arr, base_idx, q_idx, slot_of, Cpad, wave_fn = self._pack_wave(
+                    ranks, parents, qarr, level, slots_per_shard
+                )
+                new_states, sups_parts = [], []
+                for h, prev in zip(handles, prev_states):
+                    # level-2 parents are singleton ranks (per-segment rows);
+                    # later levels gather by global slot, shared by layout
+                    p_arr = h.g2l[parent_arr] if level == 2 else parent_arr
+                    new_s, sup_s = wave_fn(
+                        h.packed,
+                        prev,
+                        self._shard(p_arr, self._cand_spec),
+                        self._shard(h.g2l[base_idx], self._cand_spec),
+                        self._shard(h.g2l[q_idx], self._cand_spec),
+                    )
+                    new_states.append(new_s)
+                    sups_parts.append(sup_s)
+                self.stage_counters["waves"] += 1
+                self.stage_counters["seg_waves"] = (
+                    self.stage_counters.get("seg_waves", 0) + len(handles)
+                )
+                dispatched = (ranks, parents, slot_of, sups_parts)
+                peak = max(
+                    peak,
+                    sum(int(s.size * 4 // max(self.D * Mb, 1)) for s in new_states),
+                )
+                prev_states = new_states
+                slots_per_shard = Cpad // Mb
+                level += 1
+            if not cfg.pipeline_waves and dispatched is not None:
+                pending = (dispatched[0], dispatched[2], dispatched[3])
+                dispatched = None
+
+            surv_mask = None
+            surv_ranks = surv_slots = None
+            if pending is not None:
+                p_ranks, p_slots, p_parts = pending
+                # the streaming reduce: per-candidate supports summed over
+                # segments (additivity over disjoint partitions), THEN
+                # thresholded — this blocks on the settled wave
+                parts = jax.device_get(p_parts)
+                host = np.sum(np.stack(parts, axis=0), axis=0, dtype=np.int64)
+                svals = host[p_slots]
+                keep = svals >= min_count
+                if keep.any():
+                    emit_items = np.sort(items_arr[p_ranks[keep]], axis=1)
+                    for t, s in zip(emit_items.tolist(), svals[keep].tolist()):
+                        itemsets[tuple(t)] = int(s)
+                surv_mask = np.zeros(host.shape[0], bool)
+                surv_mask[p_slots[keep]] = True
+                surv_ranks, surv_slots = p_ranks[keep], p_slots[keep]
+                pending = None
+
+            if dispatched is not None:
+                d_ranks, d_parents, d_slot_of, d_parts = dispatched
+                if surv_mask is not None:
+                    kept = surv_mask[d_parents]
+                    d_ranks, d_slot_of = d_ranks[kept], d_slot_of[kept]
+                pending = (d_ranks, d_slot_of, d_parts)
                 ranks, parents, qarr = self._extensions(
                     d_ranks, d_slot_of, pair_packed, prefix_packed, K
                 )

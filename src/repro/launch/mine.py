@@ -22,6 +22,17 @@ snapshots (the serve-smoke CI check):
 
     PYTHONPATH=src python -m repro.launch.mine --serve --snapshot-dir /tmp/snaps \\
         --dataset mushroom --sweep 0.4,0.3,0.2
+
+``--append N`` exercises the streaming path: the dataset is split into N
+batches ingested one by one through ``engine.append`` (each batch preps
+only its own segment — the map step), and the sweep is served from the
+live segmented database (the reduce). With ``--snapshot-dir`` every
+segment is persisted; a second run replays the append log and must
+warm-start every segment, which ``--expect-warm`` enforces (the
+stream-smoke CI check):
+
+    PYTHONPATH=src python -m repro.launch.mine --append 3 --snapshot-dir /tmp/snaps \\
+        --dataset mushroom --sweep 0.4,0.3 --expect-warm
 """
 from __future__ import annotations
 
@@ -92,6 +103,49 @@ def _serve(args, rows, n_items: int, name: str, spec: MineSpec, mesh):
     return results
 
 
+def _append(args, rows, n_items: int, name: str, spec: MineSpec, mesh):
+    """Streaming path: split the dataset into ``--append`` batches, ingest
+    them through the engine's stream, serve the sweep from the live
+    SegmentedDB, and (with ``--expect-warm``) verify a replayed process
+    restored every segment from the snapshot store with zero prep."""
+    import numpy as np
+
+    engine = MiningEngine(mesh, snapshot_dir=args.snapshot_dir)
+    batches = np.array_split(rows, args.append)
+    for i, batch in enumerate(batches):
+        st = engine.append(batch, n_items, spec=spec)
+        print(
+            f"  append[{i}]: +{st['rows']} rows -> {st['segments']} segment(s), "
+            f"{st['new_items']} new item(s), prep={st['prep_source']}, "
+            f"{st['append_s'] * 1e3:.1f}ms"
+        )
+    fracs = [float(s) for s in args.sweep.split(",")] if args.sweep else [args.min_sup]
+    results = []
+    for frac in fracs:
+        res = engine.submit_stream(spec.with_(min_sup=frac))
+        results.append(res)
+        print(f"  min_sup={frac:g} -> {res.summary()} "
+              f"[{res.service_stats['stream_segments']} segments]")
+    stream = engine.stream()
+    s = stream.stats
+    print(
+        f"{name}: {len(rows)} tx streamed as {args.append} batches; "
+        f"seg_prepares={s['seg_prepares']} snapshot_hits={s['seg_snapshot_hits']} "
+        f"compactions={s['compactions']}"
+    )
+    if args.expect_warm:
+        # every already-seen segment must restore from its snapshot — a
+        # single rebuilt segment means the warm start did not hold
+        if s["seg_prepares"] != 0 or s["seg_snapshot_hits"] < args.append:
+            raise SystemExit(
+                f"expected a segment warm start but seg_prepares="
+                f"{s['seg_prepares']}, seg_snapshot_hits={s['seg_snapshot_hits']} "
+                f"(appends={args.append}, snapshot_misses={s['seg_snapshot_misses']})"
+            )
+        print("warm start verified: all segments restored from snapshots")
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--algo", default="hprepost", choices=list_miners())
@@ -121,10 +175,18 @@ def main(argv=None):
     )
     ap.add_argument(
         "--expect-warm", action="store_true",
-        help="with --serve: fail unless the whole load was served from "
-             "snapshots with zero prep stages (CI warm-start check)",
+        help="with --serve / --append: fail unless the whole load was served "
+             "from snapshots with zero prep stages (CI warm-start check)",
+    )
+    ap.add_argument(
+        "--append", type=int, default=0, metavar="N",
+        help="streaming path: split the dataset into N batches, ingest them "
+             "one by one (each preps only its own segment), and serve "
+             "--sweep/--min-sup from the live segmented database",
     )
     args = ap.parse_args(argv)
+    if args.append and args.serve:
+        ap.error("--append and --serve are separate paths; pick one")
 
     from repro.launch.mesh import make_mesh_from_spec
 
@@ -143,6 +205,8 @@ def main(argv=None):
     )
     if args.serve:
         return _serve(args, rows, n_items, name, spec, mesh)
+    if args.append:
+        return _append(args, rows, n_items, name, spec, mesh)
 
     engine = MiningEngine(mesh, snapshot_dir=args.snapshot_dir)
     if args.sweep:

@@ -63,6 +63,8 @@ __all__ = [
     "MiningService",
     "PATTERN_KINDS",
     "SnapshotStore",
+    "StreamSpec",
+    "StreamingMiner",
     "default_mesh",
     "get_miner",
     "list_miners",
@@ -72,11 +74,15 @@ __all__ = [
 
 
 def __getattr__(name: str):
-    # the serving layer is imported on first touch: it spins thread pools
-    # and cycles back through this package, neither of which belongs in a
-    # bare ``import repro.mining``
+    # the serving and streaming layers are imported on first touch: they
+    # spin thread pools and cycle back through this package, neither of
+    # which belongs in a bare ``import repro.mining``
     if name in ("MiningService", "GroupScheduler", "SnapshotStore"):
         import repro.mining.service as _service
 
         return getattr(_service, name)
+    if name in ("StreamSpec", "StreamingMiner"):
+        import repro.mining.stream as _stream
+
+        return getattr(_stream, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

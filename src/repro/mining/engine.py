@@ -38,6 +38,13 @@ database: ``stats["prepares"]`` stays 0 and results carry
 LRU to be enabled (``prep_cache_bytes > 0``) — a loaded snapshot lands in
 the LRU like any other entry.
 
+Streaming ingestion (``repro.mining.stream``): ``append`` folds a new
+transaction batch into a named live ``SegmentedDB`` as its own prepared
+segment (the paper's map step, run on the new partition only) and
+``submit_stream`` mines the segmented database via summed per-segment
+counts + cross-segment waves (the reduce) — no full rebuild when data
+arrives, and per-segment snapshots warm-start a replayed stream.
+
 The engine is thread-safe (one coarse lock over planning state): the
 service layer (``repro.mining.service``) overlaps group g+1's prepare
 with group g's wave drain and runs host algorithms on worker threads, all
@@ -108,11 +115,17 @@ class MiningEngine:
         if snapshot_store is None and snapshot_dir is not None:
             snapshot_store = SnapshotStore(snapshot_dir, byte_budget=snapshot_bytes)
         self.snapshot_store = snapshot_store
-        # engine-lifetime fingerprint memo: id(array) -> (weakref, fp);
-        # compacted (dead weakrefs dropped) when it reaches _fp_sweep_at,
-        # which doubles past the live count so sweeps stay amortized O(1)
-        self._fp_memo: dict[int, tuple[weakref.ref, tuple]] = {}
+        # engine-lifetime fingerprint memo: id(array) -> (weakref, fp,
+        # frozen); compacted (dead weakrefs dropped) when it reaches
+        # _fp_sweep_at, which doubles past the live count so sweeps stay
+        # amortized O(1). ``frozen`` records that the memo itself made the
+        # array read-only (see _fingerprint) and must restore writeability
+        # on invalidation.
+        self._fp_memo: dict[int, tuple[weakref.ref, tuple, bool]] = {}
         self._fp_sweep_at = 1024
+        # live streaming databases (repro.mining.stream), by name; each
+        # StreamingMiner serializes its own appends/queries internally
+        self._streams: dict[str, object] = {}
         # one coarse re-entrant lock over planning state (frontends, LRU,
         # fingerprint memo, counters); device/host mining itself runs
         # outside it, so threads overlap on the expensive parts only
@@ -164,20 +177,47 @@ class MiningEngine:
         The memo key is object identity guarded by a weakref: a collected
         array (whose id may be recycled by a new allocation) can never
         return a stale fingerprint, because the dead/reseated weakref fails
-        the identity check and the digest is recomputed. The one hole
-        identity memoization cannot see is IN-PLACE mutation of a
-        previously submitted array — callers doing that must pass a new
-        array or call ``invalidate_fingerprints``."""
+        the identity check and the digest is recomputed.
+
+        In-place mutation cannot slip a stale fingerprint through either:
+        an array is only memoized while it is READ-ONLY. A writeable
+        owning array is frozen (``setflags(write=False)``) on first
+        memoization — direct mutation then raises at the caller's site,
+        and the sanctioned mutation routes (``setflags(write=True)``, or
+        ``invalidate_fingerprints`` which also restores writeability) both
+        auto-invalidate: a memo entry whose array has become writeable
+        again fails the hit check and is re-hashed. Views (``arr.base`` is
+        not None) are never memoized — their content can change through
+        the base without this array's flags moving.
+
+        Known residual hole: a WRITEABLE VIEW taken *before* the submit
+        keeps its own writeable flag (NumPy does not propagate
+        ``setflags`` to existing views), so writing through it mutates the
+        frozen base undetected. That cannot be closed without re-hashing
+        every lookup; callers holding such views must use one of the
+        sanctioned routes above."""
         arr = np.asarray(rows)
         with self._lock:
             memo = self._fp_memo.get(id(arr))
             if memo is not None and memo[0]() is arr:
-                return memo[1]
+                if not arr.flags.writeable:
+                    return memo[1]
+                # caller unfroze to mutate: auto-invalidate, re-hash below
+                del self._fp_memo[id(arr)]
         fp = self._digest(arr)
+        if arr.base is not None:
+            return fp  # view: base mutation is invisible here — no memo
         try:
             ref = weakref.ref(arr)
         except TypeError:
             return fp  # not weakref-able: correctness first, no memo
+        frozen = False
+        if arr.flags.writeable:
+            try:
+                arr.setflags(write=False)
+                frozen = True
+            except ValueError:
+                return fp  # cannot freeze: mutation undetectable — no memo
         with self._lock:
             if len(self._fp_memo) >= self._fp_sweep_at:  # drop dead entries
                 self._fp_memo = {
@@ -186,21 +226,34 @@ class MiningEngine:
                 # all-live memos (many resident DBs) must not re-sweep on
                 # every insert: back off to double the surviving size
                 self._fp_sweep_at = max(1024, 2 * len(self._fp_memo))
-            self._fp_memo[id(arr)] = (ref, fp)
+            self._fp_memo[id(arr)] = (ref, fp, frozen)
         return fp
 
     def invalidate_fingerprints(self, rows=None) -> None:
-        """Forget memoized fingerprints — all of them, or just ``rows``.
+        """Forget memoized fingerprints — all of them, or just ``rows`` —
+        restoring writeability on arrays the memo froze.
 
-        The escape hatch for callers that mutate a submitted array in
-        place (the memo is identity-based and cannot observe content
-        edits). Note this drops the *fingerprint* memo only; cached
-        PreparedDB entries are keyed by content and stay valid."""
+        The convenience route for callers that want to mutate a submitted
+        array in place (the raw route is ``rows.setflags(write=True)``,
+        which the memo also treats as invalidation). Note this drops the
+        *fingerprint* memo only; cached PreparedDB entries are keyed by
+        content and stay valid."""
+        def _thaw(entry):
+            arr = entry[0]()
+            if entry[2] and arr is not None:
+                try:
+                    arr.setflags(write=True)
+                except ValueError:
+                    pass
         with self._lock:
             if rows is None:
+                for entry in self._fp_memo.values():
+                    _thaw(entry)
                 self._fp_memo.clear()
             else:
-                self._fp_memo.pop(id(np.asarray(rows)), None)
+                entry = self._fp_memo.pop(id(np.asarray(rows)), None)
+                if entry is not None:
+                    _thaw(entry)
 
     # ------------------------------------------------ PreparedDB LRU cache
     def cache_info(self) -> dict:
@@ -350,6 +403,51 @@ class MiningEngine:
         )
         res.service_stats["prep_source"] = "built"
         return res
+
+    # ------------------------------------------------------------ streaming
+    def stream(self, name: str = "default", *, n_items: int | None = None,
+               spec: MineSpec | None = None, stream_spec=None):
+        """The named ``StreamingMiner``, created on first touch (creation
+        needs ``n_items``; ``spec`` fixes its device config, ``stream_spec``
+        its segmentation/compaction knobs). Segments warm-start from the
+        engine's snapshot store when one is bound."""
+        from repro.mining.stream import StreamingMiner
+
+        with self._lock:
+            s = self._streams.get(name)
+            if s is None:
+                if n_items is None:
+                    raise ValueError(
+                        f"stream {name!r} does not exist yet; pass n_items to create it"
+                    )
+                s = StreamingMiner(
+                    self, n_items, spec=spec, stream_spec=stream_spec, name=name
+                )
+                self._streams[name] = s
+            elif n_items is not None and n_items != s.n_items:
+                raise ValueError(
+                    f"stream {name!r} was created with n_items={s.n_items}, got {n_items}"
+                )
+            return s
+
+    def append(self, rows, n_items: int | None = None, *, stream: str = "default",
+               spec: MineSpec | None = None, stream_spec=None) -> dict:
+        """Ingest one transaction batch into the named stream (the map
+        step runs on the new batch only — earlier segments are never
+        re-prepared). Returns per-append telemetry."""
+        return self.stream(
+            stream, n_items=n_items, spec=spec, stream_spec=stream_spec
+        ).append(rows)
+
+    def submit_stream(self, spec: MineSpec, *, stream: str = "default") -> MineResult:
+        """Mine the named stream's live ``SegmentedDB`` (global F1/F2 from
+        summed per-segment counts, cross-segment waves)."""
+        with self._lock:
+            s = self._streams.get(stream)
+            if s is None:
+                raise KeyError(f"no stream named {stream!r}; engine.append(...) first")
+            self.stats["submits"] += 1
+        return s.mine(spec)
 
     # ------------------------------------------------------ planned batches
     def _plan_key(self, req: MineRequest):

@@ -16,6 +16,11 @@ size, where the prep came from (built / LRU cache / snapshot) and whether
 it overlapped an earlier group's mining. ``drain()`` blocks until every
 accepted request has resolved; ``close()`` drains and stops the worker
 (also available as a context manager).
+
+Streaming traffic (``repro.mining.stream``) rides the same queue:
+``append`` and ``submit_stream`` return Futures and execute in arrival
+order relative to everything in their batch, so a query submitted after
+an append is guaranteed to see the new segment.
 """
 from __future__ import annotations
 
@@ -26,16 +31,21 @@ import time
 from concurrent.futures import Future
 from typing import Sequence
 
+import numpy as np
+
 from repro.mining.engine import MineRequest, MiningEngine
+from repro.mining.result import MineResult
 from repro.mining.service.scheduler import GroupScheduler
 from repro.mining.spec import MineSpec
 
 
 @dataclasses.dataclass
 class _Pending:
-    req: MineRequest
+    req: MineRequest | None  # None for stream operations
     future: Future
     submitted_at: float
+    kind: str = "mine"  # "mine" | "stream" (append / stream query)
+    run: object = None  # stream ops: zero-arg callable executed in order
 
 
 class MiningService:
@@ -86,6 +96,40 @@ class MiningService:
 
     def submit_many(self, requests: Sequence[MineRequest]) -> list[Future]:
         return [self.submit(r.rows, r.n_items, r.spec) for r in requests]
+
+    def _submit_stream_op(self, run) -> Future:
+        fut: Future = Future()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("MiningService is closed")
+            self._outstanding += 1
+            self.stats["requests"] += 1
+        self._q.put(_Pending(None, fut, time.monotonic(), kind="stream", run=run))
+        return fut
+
+    def append(self, rows, n_items: int | None = None, *, stream: str = "default",
+               spec: MineSpec | None = None, stream_spec=None) -> Future:
+        """Enqueue a streaming ingest (``engine.append``); the Future
+        resolves to the append telemetry dict. Stream operations execute
+        in arrival order relative to each other and to mining requests in
+        the same batch, so a query submitted after an append observes it.
+
+        The batch is copied HERE, at submit time — execution happens after
+        the batching window, and a caller reusing its array for the next
+        batch must not retroactively change what this one ingests."""
+        rows = np.array(rows, np.int32, copy=True)
+        return self._submit_stream_op(
+            lambda: self.engine.append(
+                rows, n_items, stream=stream, spec=spec, stream_spec=stream_spec
+            )
+        )
+
+    def submit_stream(self, spec: MineSpec, *, stream: str = "default") -> Future:
+        """Enqueue a query against the named stream's live ``SegmentedDB``;
+        the Future resolves to its ``MineResult``."""
+        return self._submit_stream_op(
+            lambda: self.engine.submit_stream(spec, stream=stream)
+        )
 
     def sweep(self, rows, n_items: int, spec: MineSpec,
               min_sups: Sequence[float]) -> list[Future]:
@@ -163,19 +207,44 @@ class MiningService:
             return
         self.stats["batches"] += 1
         self.stats["max_batch"] = max(self.stats["max_batch"], len(batch))
-        try:
-            results = self.scheduler.run(
-                [p.req for p in batch], return_exceptions=True
-            )
-        except BaseException as e:  # scheduler must not fail a batch silently
-            results = [e] * len(batch)
+        # execute in arrival order: contiguous runs of mining requests go
+        # through the scheduler as one planned sub-batch, stream operations
+        # (appends / stream queries) run inline between them — a query that
+        # arrived after an append must observe the appended segment
+        results: list = [None] * len(batch)
+        chunk: list[int] = []
+
+        def flush_chunk():
+            if not chunk:
+                return
+            try:
+                out = self.scheduler.run(
+                    [batch[j].req for j in chunk], return_exceptions=True
+                )
+            except BaseException as e:  # scheduler must not fail a batch silently
+                out = [e] * len(chunk)
+            for j, r in zip(chunk, out):
+                results[j] = r
+            chunk.clear()
+
+        for i, p in enumerate(batch):
+            if p.kind == "mine":
+                chunk.append(i)
+                continue
+            flush_chunk()
+            try:
+                results[i] = p.run()
+            except BaseException as e:
+                results[i] = e
+        flush_chunk()
         for p, res in zip(batch, results):
             if isinstance(res, BaseException):
                 p.future.set_exception(res)
             else:
-                res.service_stats.update(
-                    queue_time_s=t_start - p.submitted_at, batch_size=len(batch)
-                )
+                if isinstance(res, MineResult):
+                    res.service_stats.update(
+                        queue_time_s=t_start - p.submitted_at, batch_size=len(batch)
+                    )
                 p.future.set_result(res)
             with self._cv:
                 self._outstanding -= 1

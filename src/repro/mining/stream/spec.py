@@ -1,0 +1,52 @@
+"""StreamSpec: the streaming-ingestion knobs, one frozen config object.
+
+Mirrors ``MineSpec``'s posture (hashable, ``with_``-less — streams are
+long-lived, the spec is fixed at stream creation): how new batches are
+padded into segments, and when the LSM-style compactor folds small
+segments back together.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """How a ``StreamingMiner`` segments and compacts its database.
+
+    ``row_pad`` pads every appended batch's row count up to a multiple
+    (padding rows are all-PAD, support-neutral) so repeated equal-sized
+    appends hit the same jitted prepare/wave shapes instead of recompiling.
+
+    Compaction (LSM-style): a pass merges the ``compact_fanin`` smallest
+    segments' host rows and re-prepares them as one segment. It triggers
+    when the segment count exceeds ``max_segments``, or when segments
+    smaller than ``small_rows`` rows together hold more than
+    ``small_byte_frac`` of the database's bytes (``small_rows=0`` disables
+    the byte-fraction trigger). ``compact_async=True`` runs the merge
+    re-prepare on a background thread (the PR 4 prep-thread posture) so it
+    stays off the append/query path; queries meanwhile serve from the
+    uncompacted segments — bit-for-bit the same answers, supports being
+    additive either way.
+    """
+
+    row_pad: int = 1  # pad each batch's rows to a multiple of this
+    max_segments: int = 16  # compaction trigger: segment count
+    small_rows: int = 0  # a segment under this many rows is "small"
+    small_byte_frac: float = 0.5  # trigger: small segments' byte fraction
+    compact_fanin: int = 4  # smallest segments merged per compaction pass
+    compact_async: bool = False  # merge re-prepare on a background thread
+
+    def __post_init__(self):
+        if self.row_pad < 1:
+            raise ValueError(f"row_pad must be >= 1, got {self.row_pad}")
+        if self.max_segments < 1:
+            raise ValueError(f"max_segments must be >= 1, got {self.max_segments}")
+        if self.compact_fanin < 2:
+            raise ValueError(f"compact_fanin must be >= 2, got {self.compact_fanin}")
+        if not (0.0 < self.small_byte_frac <= 1.0):
+            raise ValueError(
+                f"small_byte_frac must be in (0, 1], got {self.small_byte_frac}"
+            )
+        if self.small_rows < 0:
+            raise ValueError(f"small_rows must be >= 0, got {self.small_rows}")

@@ -1,0 +1,370 @@
+"""StreamingMiner: incremental ingestion over a ``SegmentedDB``.
+
+``append(rows_batch)`` is the paper's *map* step run on only the new
+partition: one host histogram, then Job 2 / pack / F2 on the batch alone
+(``HPrepostMiner.prepare`` with the stream's imposed global item order) —
+never a rebuild of earlier segments. ``mine(spec)`` is the *reduce*:
+global F1/F2 come from summed per-segment counts, and the k>2 wave loop
+plans candidates once against the global F-lists while launching the
+fused intersect kernel per segment, summing per-candidate supports across
+segments before thresholding (``mine_prepared_segments``). Exactness
+rides on support additivity over disjoint partitions plus the shared
+stream item order every segment's tree is built in.
+
+Per-segment persistence: with the engine's ``SnapshotStore`` bound, every
+segment build is spilled under a key extended with the segment's imposed
+item order (same batch + same stream history -> same key), so a restarted
+process replaying its append log warm-starts every already-seen segment
+with **zero** prep stages (``stats["seg_prepares"] == 0``).
+
+Compaction (LSM-style): when the ``StreamSpec`` thresholds trip, the
+smallest segments' host rows are merged and re-prepared as one segment —
+global counts/C are untouched (the merge's aggregates equal the sum of
+its parts), so query answers are bit-for-bit unchanged. With
+``compact_async`` the merge runs on a background thread, off the
+append/query path, and swaps in when ready.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core import encoding as enc
+from repro.core.hprepost import PreparedDB
+from repro.mining.engine import MiningEngine
+from repro.mining.result import MineResult
+from repro.mining.spec import MineSpec
+from repro.mining.stream.segmented import Segment, SegmentedDB
+from repro.mining.stream.spec import StreamSpec
+
+# content identity of a row block — the engine's fingerprint digest, so
+# stream snapshot keys and engine fingerprints can never drift apart
+_digest = MiningEngine._digest
+
+
+class StreamingMiner:
+    """One live, append-only mining stream bound to a ``MiningEngine``.
+
+    ``spec`` fixes the device-level configuration (and so the resident
+    ``HPrepostMiner``) for every segment and query of this stream; query
+    specs may vary threshold / ``max_k`` / ``patterns`` freely but must
+    agree on the device knobs. Appends and queries are serialized per
+    stream by one lock; async compaction prepares outside it.
+    """
+
+    def __init__(self, engine, n_items: int, *, spec: MineSpec | None = None,
+                 stream_spec: StreamSpec | None = None, name: str = "default"):
+        self.engine = engine
+        self.name = name
+        self.n_items = int(n_items)
+        self.spec = spec if spec is not None else MineSpec()
+        self.stream_spec = stream_spec if stream_spec is not None else StreamSpec()
+        self._fe = engine.frontend("hprepost")
+        self._device_cfg = self._fe._device_config(self.spec)
+        self.miner = self._fe.miner_for(self.spec)
+        self.db = SegmentedDB(n_items)
+        self._lock = threading.RLock()
+        self._next_seg = 0
+        self._compact_pending: set[int] | None = None
+        self._compact_future = None
+        self._compact_pool: ThreadPoolExecutor | None = None
+        self.stats = {
+            "appends": 0, "queries": 0, "empty_batches": 0,
+            "seg_prepares": 0,  # segment builds that ran real prep stages
+            "seg_snapshot_hits": 0, "seg_snapshot_misses": 0,
+            "seg_snapshot_spill_failures": 0,
+            "compactions": 0, "segments_compacted": 0, "compact_errors": 0,
+        }
+
+    # -------------------------------------------------------------- append
+    def append(self, rows_batch) -> dict:
+        """Ingest one batch of transactions (the map step on the new
+        partition only). Returns per-append telemetry; the batch is
+        copied, so callers may keep mutating their array."""
+        rows = np.array(rows_batch, np.int32, copy=True)
+        if rows.ndim != 2:
+            raise ValueError(f"rows batch must be 2-D (R, L), got shape {rows.shape}")
+        if rows.size and int(rows.max()) >= self.n_items:
+            raise ValueError(
+                f"batch contains item id {int(rows.max())} >= n_items={self.n_items}"
+            )
+        t0 = time.perf_counter()
+        with self._lock:
+            self._reap_compaction()
+            hist = enc.item_support(rows, self.n_items)
+            new_items = self.db.register_batch(hist)
+            self.db.n_rows += len(rows)
+            self.stats["appends"] += 1
+            source = "empty"
+            if hist.sum() > 0:
+                local_items = self.db.present_in_order(hist)
+                seg, source = self._build_segment(rows, len(rows), hist, local_items)
+                self.db.add_segment(seg)
+            else:
+                self.stats["empty_batches"] += 1
+            self._maybe_compact()
+            return {
+                "rows": int(len(rows)),
+                "total_rows": int(self.db.n_rows),
+                "segments": len(self.db.segments),
+                "new_items": int(len(new_items)),
+                "prep_source": source,
+                "append_s": time.perf_counter() - t0,
+            }
+
+    def _build_segment(self, rows: np.ndarray, n_rows_real: int,
+                       hist: np.ndarray, local_items: np.ndarray) -> tuple[Segment, str]:
+        """Prepare one batch as a segment: snapshot warm-start when the
+        engine's store already holds this (rows, imposed item order,
+        device config) triple, else run the prep stages on the batch."""
+        ss = self.stream_spec
+        R0 = len(rows)
+        Rp = -(-R0 // ss.row_pad) * ss.row_pad
+        if Rp != R0:
+            padded = np.full((Rp, rows.shape[1]), enc.PAD, np.int32)
+            padded[:R0] = rows
+            rows = padded
+        fl = enc.FList(
+            items=local_items,
+            supports=hist[local_items].astype(np.int64),
+            n_items=self.n_items,
+            min_count=1,
+        )
+        digest = _digest(rows)
+        key = self._segment_key(digest, local_items)
+        store = self.engine.snapshot_store
+        prepared = None
+        source = "built"
+        if store is not None:
+            try:
+                payload = store.get(key)
+            except Exception:
+                payload = None
+            if payload is not None:
+                try:
+                    prepared = PreparedDB.from_host(payload, self.miner)
+                except ValueError:
+                    prepared = None
+            if prepared is not None:
+                self.stats["seg_snapshot_hits"] += 1
+                source = "snapshot"
+            else:
+                self.stats["seg_snapshot_misses"] += 1
+        if prepared is None:
+            prepared = self.miner.prepare(rows, self.n_items, 1, flist=fl)
+            self.stats["seg_prepares"] += 1
+            if store is not None:
+                try:
+                    store.put(key, prepared.to_host())
+                except Exception:
+                    self.stats["seg_snapshot_spill_failures"] += 1
+        packed_ext, singleton_ext = self.miner.extend_with_sentinel(prepared)
+        item_to_local = np.full(self.n_items, -1, np.int32)
+        item_to_local[local_items] = np.arange(len(local_items), dtype=np.int32)
+        seg = Segment(
+            seg_id=self._next_seg, rows=rows, n_rows=int(n_rows_real),
+            prepared=prepared, packed_ext=packed_ext, singleton_ext=singleton_ext,
+            local_items=local_items, item_to_local=item_to_local,
+            digest=digest[2],
+        )
+        self._next_seg += 1
+        return seg, source
+
+    def _segment_key(self, digest: tuple, local_items: np.ndarray) -> str:
+        """On-disk identity of a segment build: the batch content, the
+        imposed item order (the same rows appended into a different stream
+        history pack differently!), the device config, and the shard
+        count."""
+        from repro.mining.service.store import SnapshotStore
+
+        items_digest = hashlib.sha1(
+            np.ascontiguousarray(local_items, np.int32).tobytes()
+        ).hexdigest()
+        return SnapshotStore.key_for(
+            "hprepost-seg", digest, self.n_items,
+            {"cfg": dataclasses.asdict(self._device_cfg), "stream_items": items_digest},
+            self.miner.D,
+        )
+
+    # --------------------------------------------------------------- query
+    def mine(self, spec: MineSpec) -> MineResult:
+        """Serve one query from the live ``SegmentedDB`` (the reduce step
+        + cross-segment waves). Prep was paid at append time, so results
+        carry ``prep_shared`` and zeroed prep stage keys."""
+        if spec.algorithm != "hprepost":
+            raise ValueError(
+                f"stream queries run on the hprepost backend, got {spec.algorithm!r}"
+            )
+        if self._fe._device_config(spec) != self._device_cfg:
+            raise ValueError(
+                "query device config differs from the stream's; segments were "
+                "packed under the stream spec — open a new stream to change knobs"
+            )
+        self._fe._check_patterns(spec)
+        t0 = time.perf_counter()
+        with self._lock:
+            self._reap_compaction()
+            handles = self.db.handles()
+            items = np.asarray(self.db.order, np.int32)
+            sups = self.db.counts[items] if len(items) else np.zeros(0, np.int64)
+            # private copy: concurrent appends fold new batches into C/counts
+            # in place, and the wave loop reads its planning tables many times
+            C = self.db.C.copy()
+            n_rows = self.db.n_rows
+            n_segs = len(handles)
+            seg_digest = self.db.digest()
+            min_count = spec.resolve(max(n_rows, 1))
+            peak_base = sum(
+                s.prepared.bytes_at(min_count, self.miner.D) for s in self.db.segments
+            )
+        if len(items) > spec.max_f1:
+            raise ValueError(
+                f"|stream F-list|={len(items)} exceeds max_f1={spec.max_f1}"
+            )
+        res = self.miner.mine_prepared_segments(
+            handles, items, sups, C, min_count, max_k=spec.max_k, peak_base=peak_base
+        )
+        self.stats["queries"] += 1
+        out = self._fe._finish(
+            res.itemsets, res.total_count, res.n_explicit, res.peak_bytes,
+            dict(self.miner.last_stage_times), res.flist_items,
+            spec=spec, min_count=min_count, n_rows=n_rows, t0=t0, prep_shared=True,
+        )
+        out.service_stats.update(
+            prep_source="stream", stream_segments=n_segs, stream_digest=seg_digest
+        )
+        return out
+
+    # ---------------------------------------------------------- compaction
+    def _needs_compaction(self) -> bool:
+        ss = self.stream_spec
+        segs = self.db.segments
+        if len(segs) < 2:
+            return False
+        if len(segs) > ss.max_segments:
+            return True
+        if ss.small_rows > 0:
+            total = sum(s.nbytes for s in segs)
+            small = [s for s in segs if s.n_rows < ss.small_rows]
+            if (len(small) >= 2 and total
+                    and sum(s.nbytes for s in small) / total > ss.small_byte_frac):
+                return True
+        return False
+
+    def _maybe_compact(self) -> None:  # lock held
+        if self._compact_pending is None and self._needs_compaction():
+            try:
+                self._launch_compaction()
+            except Exception:
+                # an auto-triggered (possibly sync) compaction failure must
+                # not fail the append that tripped it — the batch is already
+                # ingested and the uncompacted layout answers exactly; the
+                # job accounted the error in stats["compact_errors"]
+                pass
+
+    def compact(self, *, wait: bool = True) -> dict:
+        """Force one compaction pass (merge the ``compact_fanin`` smallest
+        segments), regardless of the thresholds. ``wait=False`` with
+        ``compact_async`` returns once the pass is scheduled. Unlike the
+        auto trigger (which swallows failures — appends must not break on
+        a background merge), an explicit pass propagates a sync failure to
+        its caller."""
+        with self._lock:
+            self._reap_compaction()
+            if self._compact_pending is None and len(self.db.segments) >= 2:
+                self._launch_compaction()
+        if wait:
+            self.flush()
+        with self._lock:
+            return {"segments": len(self.db.segments),
+                    "compactions": self.stats["compactions"]}
+
+    def _launch_compaction(self) -> None:  # lock held
+        victims = sorted(self.db.segments, key=lambda s: (s.n_rows, s.seg_id))
+        victims = victims[: min(self.stream_spec.compact_fanin, len(victims))]
+        if len(victims) < 2:
+            return
+        self._compact_pending = {v.seg_id for v in victims}
+        if self.stream_spec.compact_async:
+            if self._compact_pool is None:
+                self._compact_pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="stream-compact"
+                )
+            self._compact_future = self._compact_pool.submit(self._compact_job, victims)
+        else:
+            try:
+                self._compact_job(victims)
+            except BaseException:
+                # the job's own handler normally clears the in-flight marker,
+                # but whatever failed, a dead sync pass must never leave the
+                # stream wedged (unable to ever launch another)
+                self._compact_pending = None
+                raise
+
+    def _compact_job(self, victims: list[Segment]) -> None:
+        """Merge the victims' host rows and re-prepare them as one segment
+        (possibly on the compaction thread — the expensive prepare runs
+        outside the stream lock, so appends/queries proceed against the
+        uncompacted layout, which answers identically)."""
+        try:
+            L = max(v.rows.shape[1] for v in victims)
+            R = sum(len(v.rows) for v in victims)
+            rows = np.full((R, L), enc.PAD, np.int32)
+            at = 0
+            for v in victims:
+                rows[at:at + len(v.rows), : v.rows.shape[1]] = v.rows
+                at += len(v.rows)
+            hist = enc.item_support(rows, self.n_items)
+            with self._lock:
+                # ranks are append-only, so the victims' items (all ranked
+                # when their batches arrived) have stable positions even if
+                # appends landed since the pass was scheduled
+                local_items = self.db.present_in_order(hist)
+            merged, _ = self._build_segment(rows, sum(v.n_rows for v in victims),
+                                            hist, local_items)
+            with self._lock:
+                self.db.replace_segments({v.seg_id for v in victims}, merged)
+                self.stats["compactions"] += 1
+                self.stats["segments_compacted"] += len(victims)
+                self._compact_pending = None
+                self._compact_future = None
+        except BaseException:
+            with self._lock:
+                self.stats["compact_errors"] += 1
+                self._compact_pending = None
+                self._compact_future = None
+            raise
+
+    def _reap_compaction(self) -> None:  # lock held; non-blocking
+        f = self._compact_future
+        if f is not None and f.done():
+            # a successful job cleared itself; only a failure lingers here
+            exc = f.exception()
+            self._compact_future = None
+            self._compact_pending = None
+            if exc is not None:
+                self.stats["compact_errors"] += 1
+
+    def flush(self) -> None:
+        """Block until any in-flight compaction has swapped in (or
+        failed). Never called with the stream lock held — the job needs
+        the lock to swap."""
+        f = self._compact_future
+        if f is not None:
+            try:
+                f.result()
+            except BaseException:
+                pass  # accounted by the job / _reap_compaction
+        with self._lock:
+            self._reap_compaction()
+
+    def close(self) -> None:
+        self.flush()
+        if self._compact_pool is not None:
+            self._compact_pool.shutdown(wait=True)
+            self._compact_pool = None

@@ -193,11 +193,23 @@ def test_fingerprint_memo_invalidation_story():
     fp1 = eng._fingerprint(rows)
     assert eng._fingerprint(rows) == fp1 and len(eng._fp_memo) == 1
 
-    # the documented escape hatch for in-place mutation
-    rows[0, 0] = (rows[0, 0] + 1) % n_items
+    # memoization froze the array: silent in-place mutation is impossible
+    assert not rows.flags.writeable
+    with pytest.raises(ValueError, match="read-only"):
+        rows[0, 0] = (rows[0, 0] + 1) % n_items
+
+    # sanctioned route 1: invalidate_fingerprints restores writeability
     eng.invalidate_fingerprints(rows)
+    assert rows.flags.writeable
+    rows[0, 0] = (rows[0, 0] + 1) % n_items
     fp2 = eng._fingerprint(rows)
     assert fp2 != fp1
+
+    # sanctioned route 2: unfreezing by hand auto-invalidates on next use
+    rows.setflags(write=True)
+    rows[0, 0] = (rows[0, 0] + 1) % n_items
+    fp2b = eng._fingerprint(rows)
+    assert fp2b != fp2
 
     # a dead array's memo slot can never serve a recycled id: the weakref
     # guard forces a re-hash for any new object, whatever id() it got
@@ -205,7 +217,32 @@ def test_fingerprint_memo_invalidation_story():
     del rows
     other = np.full((3, 2), 1, np.int32)
     fp3 = eng._fingerprint(other)
-    assert fp3 != fp2 and fp3[0] == (3, 2)
+    assert fp3 != fp2b and fp3[0] == (3, 2)
     eng.invalidate_fingerprints()
+    assert other.flags.writeable  # bulk invalidation thaws every live array
     assert not eng._fp_memo
     del ident
+
+
+def test_in_place_mutation_cannot_serve_stale_prep():
+    """The PR 4 memo hole, closed: mutating a submitted array in place can
+    never make the engine answer from the stale PreparedDB — the direct
+    write raises, and both sanctioned mutation routes invalidate the memo
+    so the next submit re-hashes and re-prepares."""
+    rows, n_items = _db(15)
+    eng = MiningEngine()
+    first = eng.submit(rows, n_items, SPEC)
+    with pytest.raises(ValueError, match="read-only"):
+        rows[0, 0] = (rows[0, 0] + 1) % n_items
+
+    rows.setflags(write=True)
+    rng = np.random.default_rng(16)
+    rows[:] = random_db(rng, len(rows), n_items, rows.shape[1])
+    res = eng.submit(rows, n_items, SPEC)
+    fresh = MiningEngine().submit(rows.copy(), n_items, SPEC)
+    assert res.itemsets == fresh.itemsets
+    del first
+    # two distinct databases -> two cache entries, nothing overwritten
+    assert eng.cache_info()["entries"] == 2
+    # the resubmitted array is frozen again (memoized anew)
+    assert not rows.flags.writeable

@@ -1,0 +1,351 @@
+"""Streaming ingestion: segmented N-list databases (repro.mining.stream).
+
+Anchors, per the PR acceptance criteria:
+  - parity: N appended batches answer identically to a one-shot ``mine()``
+    over the concatenated rows and to the brute-force oracle, across
+    min_sup boundaries, PAD-heavy batches, and F-list growth (a batch
+    introducing never-seen items);
+  - incrementality: appending to an S-segment database runs prep stages
+    on exactly one segment (stage counters — no full rebuild);
+  - compaction reduces the segment count while preserving query answers
+    bit-for-bit (sync and async);
+  - per-segment snapshots warm-start a replayed stream with zero prep.
+"""
+import numpy as np
+import pytest
+
+from repro.core.oracle import mine_bruteforce
+from repro.data.synth import random_db
+from repro.mining import MineSpec, MiningEngine
+from repro.mining.service import MiningService
+from repro.mining.stream import StreamSpec
+
+SPEC = MineSpec(algorithm="hprepost", max_k=4, candidate_unit=8, min_sup=0.3)
+
+
+def _batches(seed=0, sizes=(30, 14, 22), n_items=10, max_len=6):
+    rng = np.random.default_rng(seed)
+    return [random_db(rng, n, n_items, max_len) for n in sizes], n_items
+
+
+def _stream_engine(batches, n_items, spec=SPEC, stream_spec=None, **eng_kwargs):
+    eng = MiningEngine(**eng_kwargs)
+    for b in batches:
+        eng.append(b, n_items, spec=spec, stream_spec=stream_spec)
+    return eng
+
+
+# ---------------------------------------------------------------- parity
+@pytest.mark.parametrize("min_sup", [0.5, 0.3, 0.2, 0.1])
+def test_stream_matches_oneshot_and_oracle(min_sup):
+    batches, n_items = _batches(1, sizes=(25, 18, 31, 12))
+    eng = _stream_engine(batches, n_items)
+    res = eng.submit_stream(SPEC.with_(min_sup=min_sup))
+    allrows = np.concatenate(batches)
+    assert res.n_rows == len(allrows)
+    oneshot = MiningEngine().submit(allrows, n_items, SPEC.with_(min_sup=min_sup))
+    oracle = mine_bruteforce(allrows, n_items, res.min_count, max_k=SPEC.max_k)
+    assert res.itemsets == oneshot.itemsets == oracle
+    assert res.min_count == oneshot.min_count
+
+
+def test_stream_min_count_spec_and_fractional_boundary():
+    # 7 + 3 rows: min_sup=0.3 over 10 rows must demand count 3 (ceiling)
+    batches, n_items = _batches(2, sizes=(7, 3))
+    eng = _stream_engine(batches, n_items)
+    res = eng.submit_stream(SPEC.with_(min_sup=0.3))
+    assert res.min_count == 3
+    allrows = np.concatenate(batches)
+    assert res.itemsets == mine_bruteforce(allrows, n_items, 3, max_k=4)
+    res_c = eng.submit_stream(SPEC.with_(min_count=2))
+    assert res_c.itemsets == mine_bruteforce(allrows, n_items, 2, max_k=4)
+
+
+def test_stream_pad_heavy_batches():
+    from repro.core.encoding import pad_transactions
+
+    # short transactions padded wide, plus entirely empty rows
+    b1 = pad_transactions([[0], [1, 2], [], [0, 2]], max_len=8)
+    b2 = pad_transactions([[2], [], [], [0, 1, 2]], max_len=8)
+    b3 = np.full((3, 8), -1, np.int32)  # an all-PAD batch (rows still count)
+    eng = MiningEngine()
+    for b in (b1, b2, b3):
+        eng.append(b, 3, spec=SPEC)
+    assert eng.stream().stats["empty_batches"] == 1
+    res = eng.submit_stream(SPEC.with_(min_sup=0.2))
+    allrows = np.concatenate([b1, b2, b3])
+    assert res.n_rows == 11  # empty rows resolve thresholds too
+    assert res.itemsets == mine_bruteforce(allrows, 3, res.min_count, max_k=4)
+
+
+def test_stream_flist_growth_on_unseen_items():
+    rng = np.random.default_rng(5)
+    b1 = random_db(rng, 24, 5, 4)  # items 0..4 only
+    b2 = random_db(rng, 24, 12, 6)  # introduces 5..11 mid-stream
+    eng = MiningEngine()
+    s1 = eng.append(b1, 12, spec=SPEC)
+    s2 = eng.append(b2, 12, spec=SPEC)
+    assert s1["new_items"] == 5 and s2["new_items"] == 7
+    res = eng.submit_stream(SPEC.with_(min_sup=0.15))
+    b1w = np.pad(b1, ((0, 0), (0, b2.shape[1] - b1.shape[1])), constant_values=-1)
+    allrows = np.concatenate([b1w, b2])
+    assert res.itemsets == mine_bruteforce(allrows, 12, res.min_count, max_k=4)
+
+
+def test_stream_row_padding_is_support_neutral():
+    batches, n_items = _batches(6, sizes=(13, 9, 17))
+    padded = _stream_engine(batches, n_items, stream_spec=StreamSpec(row_pad=16))
+    plain = _stream_engine(batches, n_items)
+    a = padded.submit_stream(SPEC.with_(min_sup=0.2))
+    b = plain.submit_stream(SPEC.with_(min_sup=0.2))
+    assert a.n_rows == b.n_rows == 39  # pad rows don't shift thresholds
+    assert a.itemsets == b.itemsets
+
+
+# --------------------------------------------------------- incrementality
+def test_append_preps_exactly_one_segment():
+    batches, n_items = _batches(7, sizes=(20, 25, 15, 30))
+    eng = MiningEngine()
+    eng.append(batches[0], n_items, spec=SPEC)
+    stream = eng.stream()
+    miner = stream.miner
+    for b in batches[1:]:
+        before = dict(miner.stage_counters)
+        eng.append(b, n_items, spec=SPEC)
+        delta = {k: miner.stage_counters[k] - before.get(k, 0)
+                 for k in miner.stage_counters}
+        # the map step runs on the new batch alone: one Job 2 / pack / F2,
+        # no device Job 1 (the host histogram is the stream's word count),
+        # and — the no-full-rebuild guarantee — nothing times S
+        assert delta["job2"] == 1 and delta["pack"] == 1 and delta["f2"] == 1
+        assert delta["job1"] == 0 and delta["waves"] == 0
+    assert stream.stats["seg_prepares"] == len(batches)
+    assert eng.stats["prepares"] == 0  # group-prep counter untouched
+    # queries run waves only — no prep stage moves
+    before = dict(miner.stage_counters)
+    eng.submit_stream(SPEC.with_(min_sup=0.1))
+    after = miner.stage_counters
+    assert all(after[k] == before[k] for k in ("job1", "job2", "pack", "f2"))
+    assert after["waves"] > before["waves"]
+
+
+def test_stream_requires_matching_device_config_and_algorithm():
+    batches, n_items = _batches(8, sizes=(12,))
+    eng = _stream_engine(batches, n_items)
+    with pytest.raises(ValueError, match="device config"):
+        eng.submit_stream(SPEC.with_(candidate_unit=64))
+    with pytest.raises(ValueError, match="hprepost"):
+        eng.submit_stream(MineSpec(algorithm="apriori", min_sup=0.3))
+    with pytest.raises(KeyError, match="no stream"):
+        eng.submit_stream(SPEC, stream="nope")
+    eng.append(batches[0])  # existing stream: n_items may be omitted
+    with pytest.raises(ValueError, match="n_items"):
+        MiningEngine().append(batches[0])  # creation needs n_items
+    with pytest.raises(ValueError, match="n_items"):
+        eng.stream(n_items=n_items + 1)  # must match at re-touch
+
+
+# ------------------------------------------------------------- compaction
+@pytest.mark.parametrize("compact_async", [False, True])
+def test_compaction_preserves_answers_bit_for_bit(compact_async):
+    batches, n_items = _batches(9, sizes=(14, 9, 21, 7, 26, 11))
+    ss = StreamSpec(max_segments=3, compact_fanin=3, compact_async=compact_async)
+    eng = _stream_engine(batches, n_items, stream_spec=ss)
+    stream = eng.stream()
+    stream.flush()
+    assert stream.stats["compactions"] >= 1
+    assert len(stream.db.segments) < len(batches)
+    res = eng.submit_stream(SPEC.with_(min_sup=0.15))
+    flat = _stream_engine(batches, n_items)  # same appends, no compaction
+    ref = flat.submit_stream(SPEC.with_(min_sup=0.15))
+    assert len(flat.stream().db.segments) == len(batches)
+    assert res.itemsets == ref.itemsets
+    assert res.itemsets == mine_bruteforce(
+        np.concatenate(batches), n_items, res.min_count, max_k=4
+    )
+
+
+def test_forced_compaction_pass_reduces_segments():
+    batches, n_items = _batches(10, sizes=(10, 12, 9, 11))
+    eng = _stream_engine(batches, n_items)  # defaults: no auto trigger
+    stream = eng.stream()
+    before = eng.submit_stream(SPEC.with_(min_sup=0.2))
+    assert len(stream.db.segments) == 4
+    stream.compact()
+    assert len(stream.db.segments) == 1  # fanin 4 folds them all
+    assert stream.stats["segments_compacted"] == 4
+    after = eng.submit_stream(SPEC.with_(min_sup=0.2))
+    assert before.itemsets == after.itemsets
+
+
+def test_auto_compaction_failure_never_fails_the_append():
+    batches, n_items = _batches(18, sizes=(10, 11, 12))
+    ss = StreamSpec(max_segments=2, compact_fanin=2)
+    eng = MiningEngine()
+    eng.append(batches[0], n_items, spec=SPEC, stream_spec=ss)
+    eng.append(batches[1], n_items, spec=SPEC)
+    stream = eng.stream()
+
+    def boom(*a, **k):
+        raise RuntimeError("merge prepare blew up")
+
+    stream._compact_job = boom
+    # the 3rd append trips the auto trigger; its data must land anyway
+    st = eng.append(batches[2], n_items)
+    assert st["segments"] == 3 and st["total_rows"] == 33
+    res = eng.submit_stream(SPEC.with_(min_sup=0.2))
+    assert res.itemsets == mine_bruteforce(
+        np.concatenate(batches), n_items, res.min_count, max_k=4
+    )
+    # ... but an EXPLICIT pass propagates the failure to its caller
+    with pytest.raises(RuntimeError, match="blew up"):
+        stream.compact()
+
+
+def test_small_byte_fraction_trigger():
+    batches, n_items = _batches(11, sizes=(6, 7, 5, 8))
+    ss = StreamSpec(small_rows=50, small_byte_frac=0.5, compact_fanin=4)
+    eng = _stream_engine(batches, n_items, stream_spec=ss)
+    stream = eng.stream()
+    stream.flush()
+    # every segment is "small": the byte fraction fires well before
+    # max_segments (16) would
+    assert stream.stats["compactions"] >= 1
+    assert len(stream.db.segments) < 4
+
+
+# ---------------------------------------------------- snapshot warm-start
+def test_segment_snapshots_warm_start_replayed_stream(tmp_path):
+    batches, n_items = _batches(12, sizes=(18, 23, 14))
+    eng = _stream_engine(batches, n_items, snapshot_dir=str(tmp_path))
+    ref = eng.submit_stream(SPEC)
+    s1 = eng.stream().stats
+    assert s1["seg_prepares"] == 3 and s1["seg_snapshot_hits"] == 0
+
+    # "process restart": a fresh engine replays the same append log
+    eng2 = _stream_engine(batches, n_items, snapshot_dir=str(tmp_path))
+    s2 = eng2.stream().stats
+    assert s2["seg_prepares"] == 0  # every segment restored from disk
+    assert s2["seg_snapshot_hits"] == 3
+    res = eng2.submit_stream(SPEC)
+    assert res.itemsets == ref.itemsets
+
+    # a replay with different history must NOT hit the same snapshots:
+    # the key carries the imposed item order, not just the batch bytes
+    eng3 = _stream_engine(batches[::-1], n_items, snapshot_dir=str(tmp_path))
+    res3 = eng3.submit_stream(SPEC)
+    assert res3.itemsets == ref.itemsets  # answers agree regardless
+    assert eng3.stream().stats["seg_prepares"] >= 1
+
+
+def test_segment_set_digest_tracks_layout():
+    batches, n_items = _batches(13, sizes=(10, 12))
+    eng = _stream_engine(batches[:1], n_items)
+    d1 = eng.stream().db.digest()
+    eng.append(batches[1], n_items)
+    d2 = eng.stream().db.digest()
+    assert d1 != d2
+    r = eng.submit_stream(SPEC)
+    assert r.service_stats["stream_digest"] == d2
+    assert r.service_stats["stream_segments"] == 2
+    assert r.service_stats["prep_source"] == "stream"
+    assert r.prep_shared  # prep was paid at append time, not by the query
+
+
+# ------------------------------------------------------- service wiring
+def test_service_append_then_query_sees_the_segment():
+    batches, n_items = _batches(14, sizes=(20, 16))
+    with MiningService(batch_window_s=0.25) as svc:
+        fa = svc.append(batches[0], n_items, spec=SPEC)
+        fb = svc.append(batches[1], n_items, spec=SPEC)
+        fq = svc.submit_stream(SPEC)
+        fm = svc.submit(np.concatenate(batches), n_items, SPEC)
+        sa, sb = fa.result(timeout=120), fb.result(timeout=120)
+        rq, rm = fq.result(timeout=120), fm.result(timeout=120)
+    assert sa["segments"] == 1 and sb["segments"] == 2
+    assert rq.n_rows == 36  # the query observed both earlier appends
+    assert rq.itemsets == rm.itemsets
+    assert rq.service_stats["batch_size"] == 4
+
+
+def test_service_append_copies_at_submit_time():
+    batches, n_items = _batches(19, sizes=(14, 14))
+    buf = batches[0].copy()
+    with MiningService(batch_window_s=0.3) as svc:
+        svc.append(buf, n_items, spec=SPEC)
+        buf[:] = batches[1]  # caller reuses its buffer inside the window
+        svc.append(buf, n_items)
+        fq = svc.submit_stream(SPEC.with_(min_sup=0.2))
+        rq = fq.result(timeout=120)
+    # both intended batches were ingested — not batch[1] twice
+    allrows = np.concatenate(batches)
+    assert rq.itemsets == mine_bruteforce(allrows, n_items, rq.min_count, max_k=4)
+
+
+def test_service_stream_failure_is_isolated():
+    batches, n_items = _batches(15, sizes=(15,))
+    with MiningService(batch_window_s=0.2) as svc:
+        bad = svc.submit_stream(SPEC)  # no such stream yet
+        good = svc.append(batches[0], n_items, spec=SPEC)
+        with pytest.raises(KeyError):
+            bad.result(timeout=120)
+        assert good.result(timeout=120)["segments"] == 1
+
+
+# ------------------------------------------------------- additivity anchor
+def test_additivity_exhaustive_paper_db(paper_db):
+    """Deterministic (hypothesis-free) anchor for the reduce-step
+    invariant: every 2-way split of the paper's Table 1 database is
+    support-additive for every itemset up to k=3. The randomized version
+    (arbitrary DBs, up to 4-way partitions) lives in
+    tests/test_stream_properties.py under hypothesis."""
+    from repro.core.encoding import pad_transactions
+
+    rows, n_items = paper_db
+    full = mine_bruteforce(rows, n_items, 1, max_k=3)
+    tx = [[int(i) for i in r if i >= 0] for r in rows]
+    n = len(tx)
+
+    def _mine(part):
+        if not part:
+            return {}
+        return mine_bruteforce(
+            pad_transactions(part, max_len=rows.shape[1]), n_items, 1, max_k=3
+        )
+
+    for mask in range(2 ** (n - 1)):  # up to symmetry
+        pa = _mine([tx[i] for i in range(n) if (mask >> i) & 1])
+        pb = _mine([tx[i] for i in range(n) if not (mask >> i) & 1])
+        for itemset, support in full.items():
+            assert support == pa.get(itemset, 0) + pb.get(itemset, 0)
+        for itemset in (*pa, *pb):
+            assert itemset in full
+
+
+# ------------------------------------------------------------- edge cases
+def test_stream_query_paths_max_k1_and_empty():
+    batches, n_items = _batches(16, sizes=(12,))
+    eng = _stream_engine(batches, n_items)
+    r1 = eng.submit_stream(SPEC.with_(max_k=1))
+    full = eng.submit_stream(SPEC)
+    assert r1.itemsets == {k: v for k, v in full.itemsets.items() if len(k) == 1}
+    # a stream with no rows answers empty instead of erroring
+    eng2 = MiningEngine()
+    eng2.stream(n_items=5, spec=SPEC)
+    r = eng2.submit_stream(SPEC)
+    assert r.itemsets == {} and r.n_rows == 0
+
+
+def test_append_copies_the_batch():
+    batches, n_items = _batches(17, sizes=(15, 10))
+    eng = MiningEngine()
+    b0 = batches[0].copy()
+    eng.append(b0, n_items, spec=SPEC)
+    ref = eng.submit_stream(SPEC)
+    b0[:] = -1  # caller scribbles over its batch after the append
+    eng.append(batches[1], n_items)
+    eng.stream().compact()  # compaction re-prepares from the stream's copy
+    res = eng.submit_stream(SPEC)
+    allrows = np.concatenate([batches[0], batches[1]])
+    assert res.itemsets == mine_bruteforce(allrows, n_items, res.min_count, max_k=4)
+    del ref

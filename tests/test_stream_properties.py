@@ -1,0 +1,80 @@
+"""Property tests for the streaming subsystem's load-bearing invariant:
+per-segment support additivity over disjoint partitions.
+
+The reduce step is only exact because, for ANY partition of the
+transactions into segments, every itemset's whole-database support equals
+the sum of its per-segment supports. The oracle-level property is checked
+directly for all itemsets up to k=3, and end-to-end through
+``StreamingMiner`` (random batch splits must answer exactly like the
+whole database).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import pad_transactions
+from repro.core.oracle import mine_bruteforce
+from repro.mining import MineSpec, MiningEngine
+
+N_ITEMS = 6
+
+
+@st.composite
+def db_and_partition(draw):
+    """A small transaction DB plus a partition of its rows into 1-4
+    disjoint segments (possibly empty — empty map partitions are legal)."""
+    n_rows = draw(st.integers(1, 16))
+    tx = [
+        draw(st.lists(st.integers(0, N_ITEMS - 1), min_size=0, max_size=4))
+        for _ in range(n_rows)
+    ]
+    n_parts = draw(st.integers(1, 4))
+    assign = [draw(st.integers(0, n_parts - 1)) for _ in range(n_rows)]
+    return tx, assign, n_parts
+
+
+def _pad(tx):
+    return pad_transactions(tx, max_len=4) if tx else np.empty((0, 4), np.int32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(db_and_partition())
+def test_per_segment_supports_are_additive(case):
+    tx, assign, n_parts = case
+    rows = _pad(tx)
+    full = mine_bruteforce(rows, N_ITEMS, 1, max_k=3)
+    parts = [
+        mine_bruteforce(_pad([t for t, a in zip(tx, assign) if a == p]),
+                        N_ITEMS, 1, max_k=3)
+        for p in range(n_parts)
+    ]
+    # every itemset in the full DB: support == sum of segment supports
+    # (absent from a segment == zero there); and no segment can carry an
+    # itemset the full DB lacks
+    for itemset, support in full.items():
+        assert support == sum(p.get(itemset, 0) for p in parts)
+    for p in parts:
+        for itemset in p:
+            assert itemset in full
+
+
+@settings(max_examples=15, deadline=None)
+@given(db_and_partition())
+def test_streaming_miner_matches_whole_db(case):
+    tx, assign, n_parts = case
+    rows = _pad(tx)
+    spec = MineSpec(algorithm="hprepost", min_count=2, max_k=3, candidate_unit=8)
+    eng = MiningEngine()
+    eng.stream(n_items=N_ITEMS, spec=spec)  # exists even if all batches are empty
+    for p in range(n_parts):
+        eng.append(_pad([t for t, a in zip(tx, assign) if a == p]))
+    res = eng.submit_stream(spec)
+    assert res.n_rows == len(rows)
+    assert res.itemsets == mine_bruteforce(rows, N_ITEMS, 2, max_k=3)
+
+
+# The deterministic (hypothesis-free) additivity anchor lives in
+# tests/test_stream.py::test_additivity_exhaustive_paper_db so it runs
+# even where hypothesis is absent.
