@@ -5,10 +5,11 @@
 #                       kernel parity (tests/test_kernels.py, incl. the fused
 #                       intersect+support sweeps) runs first for fast signal
 #   make bench-smoke  - paper-figure benchmark at tiny scale (sanity, not numbers)
-#   make bench-json   - emit the BENCH_PR5.json perf trajectory (kernel micro-
+#   make bench-json   - emit the BENCH_PR6.json perf trajectory (kernel micro-
 #                       bench + service overlap/warm-start rows + streaming
-#                       append/query/compaction rows) for future PRs to diff;
-#                       earlier trajectories (BENCH_PR3/4.json) stay put
+#                       append/query/compaction rows + distributed 1/2/4-worker
+#                       scale-out rows) for future PRs to diff; earlier
+#                       trajectories (BENCH_PR3/4/5.json) stay put
 #   make mine-smoke   - every CLI-selectable miner on a small synth dataset
 #   make serve-smoke  - MiningService end-to-end: concurrent submits incl. a
 #                       sweep + a host-algorithm request, drain, then a second
@@ -19,14 +20,23 @@
 #                       second process replays the append log and must
 #                       warm-start every segment from the snapshot dir with
 #                       zero prep stages
+#   make dist-smoke   - distributed mining end-to-end: 2 spawned worker
+#                       processes behind the coordinator, stream 3 batches,
+#                       sweep, hard-kill one worker, re-mine — fails unless
+#                       the answers are bit-identical and the re-assigned
+#                       segments restored from snapshots without a rebuild
+#   make bench-gate   - regression gate: diff the current BENCH_PR*.json
+#                       against the previous PR's trajectory and fail if a
+#                       tracked row slowed past tolerance
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 SERVE_SNAP := .serve-smoke-snapshots
 STREAM_SNAP := .stream-smoke-snapshots
+DIST_SNAP := .dist-smoke-snapshots
 
-.PHONY: test test-tier1 bench-smoke bench-json mine-smoke serve-smoke stream-smoke
+.PHONY: test test-tier1 bench-smoke bench-json bench-gate mine-smoke serve-smoke stream-smoke dist-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -61,3 +71,13 @@ stream-smoke:
 	$(PY) -m repro.launch.mine --append 3 --snapshot-dir $(STREAM_SNAP) \
 		--dataset mushroom --scale 0.05 --sweep 0.4,0.3 --max-k 4 --expect-warm
 	rm -rf $(STREAM_SNAP)
+
+dist-smoke:
+	rm -rf $(DIST_SNAP)
+	$(PY) -m repro.launch.mine --append 3 --workers 2 --kill-worker \
+		--snapshot-dir $(DIST_SNAP) \
+		--dataset mushroom --scale 0.05 --sweep 0.4,0.3 --max-k 4
+	rm -rf $(DIST_SNAP)
+
+bench-gate:
+	$(PY) -m benchmarks.bench_gate

@@ -1,0 +1,140 @@
+"""Distributed mining bench: the PR 6 acceptance numbers.
+
+The scale-out curve the paper's cluster experiments draw (query latency
+and append/ingest throughput at 1 / 2 / 4 workers) against the
+single-process ``StreamingMiner`` on the same rows, plus a recovery-time
+row: hard-kill a worker under a 2-worker database and time the next
+query, which must detect the death, re-place the dead worker's segments
+(snapshot-restored), replay, and still answer bit-identically.
+
+On one host the workers compete for the same cores, so the curve
+measures *overhead* (RPC framing + per-worker wave launch) rather than
+speedup — the number that must stay flat for multi-host scale-out to
+pay. Every distributed result is parity-checked against the
+single-process answer before its row is emitted.
+"""
+from __future__ import annotations
+
+import shutil
+import statistics
+import tempfile
+import time
+
+import numpy as np
+
+
+def _pc() -> float:
+    return time.perf_counter()
+
+
+def run(quick: bool = False) -> list[tuple[str, float, str]]:
+    from repro.data.synth import random_db
+    from repro.mining import MineSpec, MiningEngine
+    from repro.mining.stream import StreamSpec
+
+    n_items, max_len = 24, 8
+    n_tx = 1024 if quick else 2048
+    n_batches = 8
+    reps = 3 if quick else 5
+    # min_sup low enough that k=2/3 waves actually run — at 0.05 on this
+    # synth DB only singletons survive and the rows would time an empty
+    # RPC round-trip instead of the broadcast wave path
+    spec = MineSpec(algorithm="hprepost", min_sup=0.02, max_k=4, candidate_unit=64)
+    rows = random_db(np.random.default_rng(3), n_tx, n_items, max_len)
+    batches = np.array_split(rows, n_batches)
+    pad = max(len(b) for b in batches)
+    ss = StreamSpec(row_pad=pad, max_segments=4 * n_batches)
+    out: list[tuple[str, float, str]] = []
+
+    # single-process streaming reference
+    eng = MiningEngine()
+    t0 = _pc()
+    for b in batches:
+        eng.append(b, n_items, spec=spec, stream_spec=ss)
+    t_append_1p = _pc() - t0
+    eng.submit_stream(spec)  # warm the wave jits
+    walls = []
+    for _ in range(reps):
+        t0 = _pc()
+        ref = eng.submit_stream(spec)
+        walls.append(_pc() - t0)
+    t_query_1p = statistics.median(walls)
+    out.append((
+        "dist_query_single_process", t_query_1p * 1e6,
+        f"StreamingMiner baseline, {n_batches} segments, n={len(ref.itemsets)}",
+    ))
+    out.append((
+        "dist_append_single_process", t_append_1p * 1e6,
+        f"{n_tx} rows in {n_batches} batches -> {n_tx / t_append_1p:.0f} rows/s",
+    ))
+
+    for W in (1, 2, 4):
+        deng = MiningEngine()
+        dm = deng.distribute(
+            n_items=n_items, workers=W, spec=spec, stream_spec=ss,
+            name=f"bench-w{W}",
+        )
+        try:
+            t0 = _pc()
+            for b in batches:
+                dm.append(b)
+            t_append = _pc() - t0
+            dm.mine(spec)  # warm every worker's wave jits
+            walls = []
+            for _ in range(reps):
+                t0 = _pc()
+                res = dm.mine(spec)
+                walls.append(_pc() - t0)
+            assert res.itemsets == ref.itemsets  # parity is the contract
+            t_query = statistics.median(walls)
+            out.append((
+                f"dist_query_{W}w", t_query * 1e6,
+                f"vs single-process {t_query_1p * 1e6:.0f}us "
+                f"({t_query / max(t_query_1p, 1e-9):.1f}x), n={len(res.itemsets)}",
+            ))
+            out.append((
+                f"dist_append_{W}w", t_append * 1e6,
+                f"{n_tx} rows in {n_batches} batches -> "
+                f"{n_tx / t_append:.0f} rows/s (incl. worker jit warmup)",
+            ))
+        finally:
+            dm.close()
+
+    # recovery time: 2 workers with a shared snapshot store, kill one
+    # mid-topology, time the next query end-to-end (death detection +
+    # snapshot re-placement + full replay)
+    snap_dir = tempfile.mkdtemp(prefix="bench-dist-snap-")
+    try:
+        deng = MiningEngine(snapshot_dir=snap_dir)
+        dm = deng.distribute(
+            n_items=n_items, workers=2, spec=spec, stream_spec=ss,
+            name="bench-recovery",
+        )
+        try:
+            for b in batches:
+                dm.append(b)
+            r1 = dm.mine(spec)  # warm both workers
+            assert r1.itemsets == ref.itemsets
+            victim = min(w.wid for w in dm._live())
+            dm.kill_worker(victim)
+            t0 = _pc()
+            r2 = dm.mine(spec)
+            t_recover = _pc() - t0
+            assert r2.itemsets == ref.itemsets
+            st = dm.stats
+            out.append((
+                "dist_recovery_2w", t_recover * 1e6,
+                f"kill->answer: {st['reassigned_segments']} segments re-placed, "
+                f"{st['reassign_snapshot_restores']} from snapshots, "
+                f"{st['reassign_rebuilds']} rebuilt",
+            ))
+        finally:
+            dm.close()
+    finally:
+        shutil.rmtree(snap_dir, ignore_errors=True)
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, note in run(quick=True):
+        print(f"{name},{us:.0f},{note}")

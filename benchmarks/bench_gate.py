@@ -1,0 +1,113 @@
+"""Perf regression gate over the BENCH_PR*.json trajectory files.
+
+Compares the current PR's trajectory against the previous PR's, row by
+row over the names both contain, and exits nonzero when a tracked row
+slowed past tolerance — the class of silent one-row regressions the PR 5
+trajectory carried (``mine_hprepost_mushroom`` recorded at 6x its real
+latency) becomes unshippable instead of a note for the next session.
+
+The check is deliberately loose: these benches run on shared noisy CI
+hosts, so a row fails only when ``cur > prev * tolerance + slack_us``.
+The default 3x tolerance catches order-of-magnitude breakage without
+tripping on scheduler jitter; rows measured in microseconds get the
+absolute slack so a 40us -> 130us wobble on a trivial row doesn't gate a
+merge.
+
+    python -m benchmarks.bench_gate                 # newest PR vs its predecessor
+    python -m benchmarks.bench_gate --pr 6 --prev 5 --tolerance 2.5
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _trajectories() -> dict[int, str]:
+    out = {}
+    for path in glob.glob(os.path.join(ROOT, "BENCH_PR*.json")):
+        m = re.fullmatch(r"BENCH_PR(\d+)\.json", os.path.basename(path))
+        if m:
+            out[int(m.group(1))] = path
+    return out
+
+
+def _rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in payload["records"]}
+
+
+def gate(cur_path: str, prev_path: str, *, tolerance: float = 3.0,
+         slack_us: float = 500.0, out=sys.stdout) -> int:
+    """Compare two trajectory files; returns the number of failing rows.
+    A row fails when ``cur > prev * tolerance + slack_us``; rows present
+    in only one file are reported but never fail (new subsystems appear,
+    old rows retire)."""
+    cur, prev = _rows(cur_path), _rows(prev_path)
+    shared = sorted(set(cur) & set(prev))
+    failures = []
+    print(
+        f"bench-gate: {os.path.basename(cur_path)} vs "
+        f"{os.path.basename(prev_path)} ({len(shared)} shared rows, "
+        f"tolerance {tolerance:g}x + {slack_us:g}us)", file=out,
+    )
+    for name in shared:
+        c, p = cur[name], prev[name]
+        limit = p * tolerance + slack_us
+        ratio = c / p if p > 0 else float("inf")
+        verdict = "FAIL" if c > limit else "ok"
+        if c > limit:
+            failures.append(name)
+        if c > limit or ratio > 1.5 or ratio < 0.5:
+            print(f"  [{verdict}] {name}: {p:.0f}us -> {c:.0f}us ({ratio:.2f}x)",
+                  file=out)
+    only_cur = sorted(set(cur) - set(prev))
+    only_prev = sorted(set(prev) - set(cur))
+    if only_cur:
+        print(f"  new rows (not gated): {len(only_cur)}", file=out)
+    if only_prev:
+        print(f"  retired rows: {', '.join(only_prev)}", file=out)
+    if failures:
+        print(f"bench-gate: {len(failures)} row(s) regressed past tolerance: "
+              f"{', '.join(failures)}", file=out)
+    else:
+        print("bench-gate: green", file=out)
+    return len(failures)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pr", type=int, default=None,
+                    help="PR trajectory to check (default: newest on disk)")
+    ap.add_argument("--prev", type=int, default=None,
+                    help="baseline PR (default: newest below --pr)")
+    ap.add_argument("--tolerance", type=float, default=3.0)
+    ap.add_argument("--slack-us", type=float, default=500.0)
+    args = ap.parse_args(argv)
+
+    traj = _trajectories()
+    if len(traj) < 2:
+        print("bench-gate: fewer than two BENCH_PR*.json trajectories on disk; "
+              "nothing to compare")
+        return 0
+    pr = args.pr if args.pr is not None else max(traj)
+    older = [n for n in traj if n < pr]
+    if pr not in traj or (args.prev is None and not older):
+        print(f"bench-gate: no trajectory pair for PR {pr}")
+        return 2
+    prev = args.prev if args.prev is not None else max(older)
+    if prev not in traj:
+        print(f"bench-gate: BENCH_PR{prev}.json not found")
+        return 2
+    return 1 if gate(traj[pr], traj[prev], tolerance=args.tolerance,
+                     slack_us=args.slack_us) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -152,11 +152,19 @@ def run_host_planning() -> list[tuple[str, float, str]]:
     ]
 
 
-def run_miners() -> list[tuple[str, float, str]]:
+def run_miners(reps: int = 5) -> list[tuple[str, float, str]]:
     """End-to-end miner micro-bench through the unified front-door: every
     registered algorithm on one small dense DB, jit-warm via one engine. For
     hprepost the second submit is a persistent-PreparedDB-cache hit, so the
-    reported time is the pure k>2 wave cost production resubmits pay."""
+    reported time is the pure k>2 wave cost production resubmits pay.
+
+    Reported as the **best of ``reps`` warm submits** — the PR 5
+    trajectory recorded a single submit's wall time, and a one-off
+    scheduler hiccup at emission time showed up as a phantom 6x
+    regression on ``mine_hprepost_mushroom``. For a latency floor the
+    minimum is the robust statistic (what ``timeit`` reports): any
+    interference from co-resident bench sections only ever inflates a
+    sample, never deflates it."""
     from repro.data.synth import load
     from repro.mining import MineSpec, MiningEngine, list_miners
 
@@ -168,6 +176,10 @@ def run_miners() -> list[tuple[str, float, str]]:
             continue
         spec = MineSpec(algorithm=algo, min_sup=0.35, max_k=4, candidate_unit=32)
         engine.submit(rows, n_items, spec)  # warm (compile + prep for hprepost)
-        res = engine.submit(rows, n_items, spec)
-        out.append((f"mine_{algo}_mushroom0.05_sup0.35", res.wall_time_s * 1e6, "mining-api"))
+        walls = [engine.submit(rows, n_items, spec).wall_time_s for _ in range(reps)]
+        out.append((
+            f"mine_{algo}_mushroom0.05_sup0.35",
+            min(walls) * 1e6,
+            f"mining-api, best of {reps}",
+        ))
     return out

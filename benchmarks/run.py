@@ -19,21 +19,23 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
-BENCH_PR = 5  # this PR's trajectory tag: emit_json writes BENCH_PR<n>.json
+BENCH_PR = 6  # this PR's trajectory tag: emit_json writes BENCH_PR<n>.json
 
 
 def emit_json(path: str | None = None, records=None, pr: int = BENCH_PR) -> str:
     """Write the machine-readable perf trajectory: kernel micro-bench rows,
     the host wave-planning vec-vs-loop comparison, end-to-end miner timings
     through one warm ``MiningEngine``, the service rows (cross-group
-    overlap + snapshot warm-start), and the streaming rows (append
-    throughput vs full rebuild, segmented query latency, compaction cost).
+    overlap + snapshot warm-start), the streaming rows (append
+    throughput vs full rebuild, segmented query latency, compaction cost),
+    and the distributed rows (1/2/4-worker scale-out + recovery time).
     Future PRs diff their own emit against this file instead of re-deriving
-    a baseline.
+    a baseline (``make bench-gate`` automates the diff).
 
     The output name is parameterized by ``pr`` (default: this PR), so each
     PR's trajectory lands in its own ``BENCH_PR<n>.json`` instead of
     overwriting its predecessor's."""
+    from benchmarks.bench_distributed import run as distributed_run
     from benchmarks.bench_kernels import run as kernels_run
     from benchmarks.bench_service import run as service_run
     from benchmarks.bench_stream import run as stream_run
@@ -41,7 +43,8 @@ def emit_json(path: str | None = None, records=None, pr: int = BENCH_PR) -> str:
     if path is None:
         path = os.path.join(os.path.dirname(__file__), "..", f"BENCH_PR{pr}.json")
     if records is None:
-        records = kernels_run() + service_run(quick=True) + stream_run(quick=True)
+        records = (kernels_run() + service_run(quick=True)
+                   + stream_run(quick=True) + distributed_run(quick=True))
     payload = {
         "schema": "bench-trajectory-v1",
         "pr": pr,
@@ -92,7 +95,12 @@ def main() -> None:
     trecs = stream_run(quick=args.quick)
     for name, us, note in trecs:
         print(f"{name},{us:.0f},{note}")
-    emit_json(records=recs + srecs + trecs)
+    from benchmarks.bench_distributed import run as distributed_run
+
+    drecs = distributed_run(quick=args.quick)
+    for name, us, note in drecs:
+        print(f"{name},{us:.0f},{note}")
+    emit_json(records=recs + srecs + trecs + drecs)
 
     # --- scaling (subprocesses with fake devices)
     if not args.skip_scaling:

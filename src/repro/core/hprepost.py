@@ -227,6 +227,74 @@ class SegmentHandle:
     g2l: np.ndarray  # (K_global,) int32: stream rank -> local rank | K_s
 
 
+class LocalSegmentExecutor:
+    """Runs planned waves over in-process segment handles — the execution
+    half of ``mine_prepared_segments``, split from the planning loop so a
+    coordinator can swap in a remote executor (workers over RPC) without
+    touching the planner.
+
+    Contract (shared with ``repro.mining.distributed``'s remote executor):
+
+      - ``n_segments``: how many transaction partitions answer waves; 0
+        short-circuits the wave loop (F1-only result).
+      - ``begin()``: reset per-query state to the level-2 singleton
+        bootstrap.
+      - ``dispatch(level, parent_arr, base_idx, q_idx, use_local)``:
+        launch one planned wave over every segment; returns an opaque
+        token. Must not block on device results (pipelining).
+      - ``collect(token)``: block, and return the per-candidate supports
+        summed over this executor's segments as an int64 host vector —
+        the paper's reduce step for this partition set.
+      - ``state_bytes``: footprint of the in-flight merged-N-list states
+        after the latest dispatch/collect (peak accounting).
+    """
+
+    def __init__(self, miner: "HPrepostMiner", handles: "list[SegmentHandle]"):
+        self.miner = miner
+        self.handles = list(handles)
+        self._prev: list | None = None
+        self.state_bytes = 0
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.handles)
+
+    def begin(self) -> None:
+        self._prev = [h.singleton for h in self.handles]
+        self.state_bytes = 0
+
+    def dispatch(self, level, parent_arr, base_idx, q_idx, use_local):
+        m = self.miner
+        wave_fn = m._wave_local if use_local else m._wave
+        new_states, parts = [], []
+        for h, prev in zip(self.handles, self._prev):
+            # level-2 parents are singleton ranks (per-segment rows);
+            # later levels gather by global slot, shared by layout
+            p_arr = h.g2l[parent_arr] if level == 2 else parent_arr
+            new_s, sup_s = wave_fn(
+                h.packed,
+                prev,
+                m._shard(p_arr, m._cand_spec),
+                m._shard(h.g2l[base_idx], m._cand_spec),
+                m._shard(h.g2l[q_idx], m._cand_spec),
+            )
+            new_states.append(new_s)
+            parts.append(sup_s)
+        m.stage_counters["waves"] += 1
+        m.stage_counters["seg_waves"] = (
+            m.stage_counters.get("seg_waves", 0) + len(self.handles)
+        )
+        self._prev = new_states
+        self.state_bytes = sum(
+            int(s.size * 4 // max(m.D * m._Mb, 1)) for s in new_states
+        )
+        return parts
+
+    def collect(self, parts) -> np.ndarray:
+        arrs = jax.device_get(parts)
+        return np.sum(np.stack(arrs, axis=0), axis=0, dtype=np.int64)
+
+
 def _pow2(n: int) -> int:
     p = 1
     while p < n:
@@ -745,6 +813,7 @@ class HPrepostMiner:
         *,
         max_k: int | None | type(Ellipsis) = ...,
         peak_base: int = 0,
+        executor=None,
     ) -> PrepostResult:
         """The k>2 wave loop over a *segmented* database (the streaming
         reduce step): candidates are planned once against the global
@@ -761,6 +830,14 @@ class HPrepostMiner:
         > 2 need no per-segment translation — only base/extension item
         indices (and the level-2 singleton parents) route through each
         segment's ``g2l``. Pipelining semantics match ``mine_prepared``.
+
+        ``executor`` abstracts *where* waves run: the default
+        ``LocalSegmentExecutor(self, handles)`` executes them in-process
+        (exactly the pre-refactor behavior); ``repro.mining.distributed``
+        passes a remote executor that broadcasts each wave to worker
+        processes and sums their support vectors — the planning loop here
+        is identical either way, which is what makes the distributed path
+        bit-identical by construction.
         """
         cfg = self.cfg
         max_k = cfg.max_k if max_k is ... else max_k
@@ -781,13 +858,15 @@ class HPrepostMiner:
         for it, s in zip(flist_items.tolist(), f_sups[order].tolist()):
             itemsets[(int(it),)] = int(s)
         peak = int(peak_base)
-        if K == 0 or max_k == 1 or not itemsets or not handles:
+        if executor is None:
+            executor = LocalSegmentExecutor(self, handles)
+        if K == 0 or max_k == 1 or not itemsets or executor.n_segments == 0:
             return PrepostResult(itemsets, flist_items, len(itemsets), len(itemsets), peak)
 
         pair_ok = (C + C.T) >= min_count
         pair_packed = np.packbits(pair_ok, axis=1)
         prefix_packed = np.packbits(np.tri(K, K, -1, dtype=bool), axis=1)
-        prev_states = [h.singleton for h in handles]
+        executor.begin()
         qs, ps = np.nonzero(C >= min_count)
         ranks = np.stack([qs, ps], axis=1).astype(np.int32)
         parents = ps.astype(np.int64)
@@ -804,30 +883,11 @@ class HPrepostMiner:
                 parent_arr, base_idx, q_idx, slot_of, Cpad, wave_fn = self._pack_wave(
                     ranks, parents, qarr, level, slots_per_shard
                 )
-                new_states, sups_parts = [], []
-                for h, prev in zip(handles, prev_states):
-                    # level-2 parents are singleton ranks (per-segment rows);
-                    # later levels gather by global slot, shared by layout
-                    p_arr = h.g2l[parent_arr] if level == 2 else parent_arr
-                    new_s, sup_s = wave_fn(
-                        h.packed,
-                        prev,
-                        self._shard(p_arr, self._cand_spec),
-                        self._shard(h.g2l[base_idx], self._cand_spec),
-                        self._shard(h.g2l[q_idx], self._cand_spec),
-                    )
-                    new_states.append(new_s)
-                    sups_parts.append(sup_s)
-                self.stage_counters["waves"] += 1
-                self.stage_counters["seg_waves"] = (
-                    self.stage_counters.get("seg_waves", 0) + len(handles)
+                token = executor.dispatch(
+                    level, parent_arr, base_idx, q_idx, wave_fn is self._wave_local
                 )
-                dispatched = (ranks, parents, slot_of, sups_parts)
-                peak = max(
-                    peak,
-                    sum(int(s.size * 4 // max(self.D * Mb, 1)) for s in new_states),
-                )
-                prev_states = new_states
+                dispatched = (ranks, parents, slot_of, token)
+                peak = max(peak, int(executor.state_bytes))
                 slots_per_shard = Cpad // Mb
                 level += 1
             if not cfg.pipeline_waves and dispatched is not None:
@@ -837,12 +897,12 @@ class HPrepostMiner:
             surv_mask = None
             surv_ranks = surv_slots = None
             if pending is not None:
-                p_ranks, p_slots, p_parts = pending
+                p_ranks, p_slots, p_token = pending
                 # the streaming reduce: per-candidate supports summed over
                 # segments (additivity over disjoint partitions), THEN
                 # thresholded — this blocks on the settled wave
-                parts = jax.device_get(p_parts)
-                host = np.sum(np.stack(parts, axis=0), axis=0, dtype=np.int64)
+                host = executor.collect(p_token)
+                peak = max(peak, int(executor.state_bytes))
                 svals = host[p_slots]
                 keep = svals >= min_count
                 if keep.any():
@@ -855,11 +915,11 @@ class HPrepostMiner:
                 pending = None
 
             if dispatched is not None:
-                d_ranks, d_parents, d_slot_of, d_parts = dispatched
+                d_ranks, d_parents, d_slot_of, d_token = dispatched
                 if surv_mask is not None:
                     kept = surv_mask[d_parents]
                     d_ranks, d_slot_of = d_ranks[kept], d_slot_of[kept]
-                pending = (d_ranks, d_slot_of, d_parts)
+                pending = (d_ranks, d_slot_of, d_token)
                 ranks, parents, qarr = self._extensions(
                     d_ranks, d_slot_of, pair_packed, prefix_packed, K
                 )

@@ -33,6 +33,17 @@ stream-smoke CI check):
 
     PYTHONPATH=src python -m repro.launch.mine --append 3 --snapshot-dir /tmp/snaps \\
         --dataset mushroom --sweep 0.4,0.3 --expect-warm
+
+``--workers W`` (with ``--append``) runs the same ingest through the
+distributed coordinator/worker subsystem: W spawned worker processes own
+disjoint segment sets, queries broadcast waves over RPC and sum supports
+across workers. ``--kill-worker`` hard-kills a worker after the first
+sweep and fails unless the re-mined sweep is bit-identical, with
+re-assigned segments restored from the snapshot store only (the
+dist-smoke CI check):
+
+    PYTHONPATH=src python -m repro.launch.mine --append 3 --workers 2 \\
+        --kill-worker --snapshot-dir /tmp/snaps --dataset mushroom --sweep 0.4,0.3
 """
 from __future__ import annotations
 
@@ -101,6 +112,71 @@ def _serve(args, rows, n_items: int, name: str, spec: MineSpec, mesh):
                 )
             print("warm start verified: zero prep stages, served from snapshots")
     return results
+
+
+def _append_distributed(args, rows, n_items: int, name: str, spec: MineSpec, mesh):
+    """Distributed path: spawn ``--workers`` worker processes behind the
+    coordinator, stream the dataset in as ``--append`` batches (each
+    placed on one worker), serve the sweep with waves broadcast over RPC.
+    With ``--kill-worker`` the lowest live worker is hard-killed after the
+    first sweep; the re-mined sweep must answer bit-identically, and with
+    a snapshot dir the re-assigned segments must restore without any
+    rebuild (the dist-smoke CI check)."""
+    import numpy as np
+
+    engine = MiningEngine(mesh, snapshot_dir=args.snapshot_dir)
+    dm = engine.distribute(n_items=n_items, workers=args.workers, spec=spec)
+    try:
+        batches = np.array_split(rows, args.append)
+        for i, batch in enumerate(batches):
+            st = dm.append(batch)
+            print(
+                f"  append[{i}]: +{st['rows']} rows -> worker {st['worker']}, "
+                f"{st['segments']} segment(s), prep={st['prep_source']}, "
+                f"{st['append_s'] * 1e3:.1f}ms"
+            )
+        fracs = [float(s) for s in args.sweep.split(",")] if args.sweep else [args.min_sup]
+        results = []
+        for frac in fracs:
+            res = engine.submit_stream(spec.with_(min_sup=frac))
+            results.append(res)
+            print(f"  min_sup={frac:g} -> {res.summary()} "
+                  f"[{res.service_stats['stream_segments']} segments, "
+                  f"{res.service_stats['workers']} workers]")
+        print(
+            f"{name}: {len(rows)} tx streamed as {args.append} batches "
+            f"over {args.workers} workers"
+        )
+        if args.kill_worker:
+            victim = min(w.wid for w in dm._live())
+            print(f"  killing worker {victim} (hard, mid-topology) ...")
+            dm.kill_worker(victim)
+            for frac, before in zip(fracs, results):
+                after = dm.mine(spec.with_(min_sup=frac))
+                if after.itemsets != before.itemsets:
+                    raise SystemExit(
+                        f"post-kill sweep diverged at min_sup={frac:g}: "
+                        f"{len(after.itemsets)} vs {len(before.itemsets)} itemsets"
+                    )
+            st = dm.stats
+            print(
+                f"  recovered: failovers={st['failovers']} "
+                f"reassigned={st['reassigned_segments']} "
+                f"snapshot_restores={st['reassign_snapshot_restores']} "
+                f"rebuilds={st['reassign_rebuilds']}"
+            )
+            if args.snapshot_dir and st["reassign_rebuilds"] != 0:
+                raise SystemExit(
+                    f"expected snapshot-only recovery but "
+                    f"{st['reassign_rebuilds']} segment(s) were rebuilt"
+                )
+            print(
+                "recovery verified: bit-identical sweep after worker death"
+                + (", segments restored from snapshots only" if args.snapshot_dir else "")
+            )
+        return results
+    finally:
+        dm.close()
 
 
 def _append(args, rows, n_items: int, name: str, spec: MineSpec, mesh):
@@ -184,9 +260,24 @@ def main(argv=None):
              "one by one (each preps only its own segment), and serve "
              "--sweep/--min-sup from the live segmented database",
     )
+    ap.add_argument(
+        "--workers", type=int, default=0, metavar="W",
+        help="with --append: distributed path — spawn W worker processes "
+             "(coordinator/worker over RPC) and place segments on them",
+    )
+    ap.add_argument(
+        "--kill-worker", action="store_true",
+        help="with --workers: after the first sweep, hard-kill one worker, "
+             "re-mine, and fail unless the answers are bit-identical (and, "
+             "with --snapshot-dir, recovered without rebuilding a segment)",
+    )
     args = ap.parse_args(argv)
     if args.append and args.serve:
         ap.error("--append and --serve are separate paths; pick one")
+    if args.workers and not args.append:
+        ap.error("--workers needs --append N (the distributed ingest path)")
+    if args.kill_worker and args.workers < 2:
+        ap.error("--kill-worker needs --workers >= 2 (someone must survive)")
 
     from repro.launch.mesh import make_mesh_from_spec
 
@@ -206,6 +297,8 @@ def main(argv=None):
     if args.serve:
         return _serve(args, rows, n_items, name, spec, mesh)
     if args.append:
+        if args.workers:
+            return _append_distributed(args, rows, n_items, name, spec, mesh)
         return _append(args, rows, n_items, name, spec, mesh)
 
     engine = MiningEngine(mesh, snapshot_dir=args.snapshot_dir)

@@ -1,0 +1,531 @@
+"""Coordinator: the paper's JobTracker. Plans every query once against
+the global F-lists, broadcasts waves to the workers, sums their partial
+supports, and owns placement + failover.
+
+``DistributedMiner`` is a drop-in for ``StreamingMiner`` behind
+``MiningEngine.distribute`` — same ``append(rows) -> dict`` /
+``mine(spec) -> MineResult`` surface, so the ``MiningService`` submit
+path is unchanged for callers. Internally:
+
+  - global state (stream item ranks, summed counts, summed F2 matrix,
+    row totals) lives in a ``SegmentedDB`` used *without* device
+    segments — the coordinator holds plans, never N-lists;
+  - each appended batch is placed on one worker (byte-balanced greedy,
+    ``placement``) which builds the segment via the shared
+    ``build_segment`` (snapshot-first against the shared store dir);
+  - ``mine`` runs ``HPrepostMiner.mine_prepared_segments`` with a
+    ``RemoteSegmentExecutor``: the identical planning loop the local
+    path uses, with wave execution swapped for a broadcast + reduce
+    over workers — results are bit-identical by construction;
+  - failover: a dead worker's segments (the coordinator retains every
+    batch's host rows, its append log) are re-placed over survivors,
+    who warm-restore them from the content-addressed snapshots with
+    zero prep recompute; an in-flight query is then replayed from
+    level 2 — deterministic planning makes the retry bit-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import multiprocessing as mp
+import os
+import threading
+import time
+
+import numpy as np
+
+from repro.core import encoding as enc
+from repro.mining.distributed import placement
+from repro.mining.distributed import protocol as pr
+from repro.mining.distributed.transport import Listener
+from repro.mining.distributed.worker import worker_main
+from repro.mining.engine import MiningEngine
+from repro.mining.result import MineResult
+from repro.mining.spec import MineSpec
+from repro.mining.stream.segmented import SegmentedDB
+from repro.mining.stream.spec import StreamSpec
+
+_digest = MiningEngine._digest
+
+
+class WorkerDied(RuntimeError):
+    """One worker stopped answering (EOF, reset, or reply timeout)."""
+
+    def __init__(self, worker_id: int, why: str = ""):
+        super().__init__(f"worker {worker_id} died" + (f": {why}" if why else ""))
+        self.worker_id = worker_id
+
+
+class NoLiveWorkers(RuntimeError):
+    """Every worker is gone; the database cannot answer waves."""
+
+
+@dataclasses.dataclass
+class WorkerHandle:
+    wid: int
+    chan: object
+    proc: object
+    alive: bool = True
+    next_seq: int = 0
+
+
+@dataclasses.dataclass
+class SegmentMeta:
+    """Coordinator-side record of one placed segment: enough to re-prep
+    it anywhere (host rows + imposed item order), never device state."""
+
+    seg_id: int
+    rows: np.ndarray  # raw (unpadded) host batch — the append log entry
+    n_rows_real: int
+    local_items: np.ndarray
+    worker: int
+    nbytes: int = 0
+    prep_bytes: int = 0
+    digest: str = ""
+
+
+class RemoteSegmentExecutor:
+    """Wave execution over RPC: ``dispatch`` broadcasts one planned wave
+    to every participating worker without blocking (the coordinator's
+    pipelined planner keeps running), ``collect`` gathers the per-worker
+    support sums and adds them — the cross-machine reduce."""
+
+    def __init__(self, coord: "DistributedMiner", items: np.ndarray):
+        self.coord = coord
+        self.items = items
+        owners = {m.worker for m in coord._segments.values()}
+        self.workers = [w for w in coord._live() if w.wid in owners]
+        self.n_segments = len(coord._segments)
+        self.state_bytes = 0
+
+    def begin(self) -> None:
+        c = self.coord
+        seqs = [
+            (w, c._send(w, {"op": pr.OP_QUERY_BEGIN, "items": self.items}))
+            for w in self.workers
+        ]
+        for w, seq in seqs:
+            c._expect(w, seq)
+
+    def dispatch(self, level, parent_arr, base_idx, q_idx, use_local):
+        c = self.coord
+        msg = {
+            "op": pr.OP_WAVE, "level": int(level), "parent_arr": parent_arr,
+            "base_idx": base_idx, "q_idx": q_idx, "use_local": bool(use_local),
+        }
+        c._miner.stage_counters["waves"] += 1
+        c._miner.stage_counters["seg_waves"] = (
+            c._miner.stage_counters.get("seg_waves", 0) + self.n_segments
+        )
+        return [(w, c._send(w, msg)) for w in self.workers], len(parent_arr)
+
+    def collect(self, token) -> np.ndarray:
+        pairs, cpad = token
+        total = np.zeros(cpad, np.int64)
+        state_bytes = 0
+        for w, seq in pairs:
+            rep = self.coord._expect(w, seq)
+            total += np.asarray(rep["sups"], np.int64)
+            state_bytes += int(rep.get("state_bytes", 0))
+        self.state_bytes = state_bytes
+        return total
+
+    def finish(self) -> None:
+        for w in self.workers:
+            if w.alive:
+                try:
+                    self.coord._request(w, {"op": pr.OP_QUERY_END})
+                except WorkerDied:
+                    pass  # the next op will notice and fail over
+
+
+class DistributedMiner:
+    """One distributed, append-only mining database: N spawned worker
+    processes behind a ``StreamingMiner``-shaped front."""
+
+    def __init__(self, engine, n_items: int, *, workers: int = 2,
+                 spec: MineSpec | None = None, stream_spec: StreamSpec | None = None,
+                 snapshot_dir: str | None = None, heartbeat_s: float = 0.0,
+                 rpc_timeout_s: float = 180.0, spawn_timeout_s: float = 120.0,
+                 name: str = "default"):
+        if workers < 1:
+            raise ValueError(f"need at least 1 worker, got {workers}")
+        self.engine = engine
+        self.name = name
+        self.n_items = int(n_items)
+        self.spec = spec if spec is not None else MineSpec()
+        self.stream_spec = stream_spec if stream_spec is not None else StreamSpec()
+        self._fe = engine.frontend("hprepost")
+        self._device_cfg = self._fe._device_config(self.spec)
+        # planner only: the coordinator never runs wave kernels itself
+        self._miner = self._fe.miner_for(self.spec)
+        if self._miner._Mb != 1:
+            # workers always run their own single-host mesh; a coordinator
+            # planning model-partitioned slot layouts would disagree with
+            # how workers interpret the wave's local parent rows
+            raise ValueError(
+                "distributed mining plans in an unpartitioned candidate "
+                "space; use a 1x1 coordinator mesh (model shards stay "
+                "inside each worker)"
+            )
+        if snapshot_dir is None and engine.snapshot_store is not None:
+            snapshot_dir = engine.snapshot_store.dir
+        self.snapshot_dir = snapshot_dir
+        self.rpc_timeout_s = float(rpc_timeout_s)
+        self.heartbeat_s = float(heartbeat_s)
+        self.db = SegmentedDB(n_items)  # global ranks/counts/C/n_rows only
+        self._segments: dict[int, SegmentMeta] = {}
+        self._next_seg = 0
+        self._op_lock = threading.RLock()
+        self.stats = {
+            "appends": 0, "queries": 0, "empty_batches": 0,
+            "workers_spawned": int(workers), "workers_lost": 0,
+            "failovers": 0, "query_retries": 0,
+            "reassigned_segments": 0, "reassign_snapshot_restores": 0,
+            "reassign_rebuilds": 0,
+        }
+        self._listener = Listener()
+        self._workers: dict[int, WorkerHandle] = {}
+        self._spawn_workers(workers, spawn_timeout_s)
+        self._stop = threading.Event()
+        self._monitor = None
+        if self.heartbeat_s > 0:
+            self._monitor = threading.Thread(
+                target=self._monitor_loop, name=f"dist-hb-{name}", daemon=True
+            )
+            self._monitor.start()
+
+    # ------------------------------------------------------------ lifecycle
+    def _spawn_workers(self, n: int, spawn_timeout_s: float) -> None:
+        # spawn (not fork): each worker initializes its own jax runtime
+        ctx = mp.get_context("spawn")
+        src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+        path = os.environ.get("PYTHONPATH", "")
+        if src_root not in path.split(os.pathsep):
+            os.environ["PYTHONPATH"] = (
+                src_root + (os.pathsep + path if path else "")
+            )
+        procs = {}
+        for wid in range(n):
+            p = ctx.Process(
+                target=worker_main,
+                args=(self._listener.address, wid, self.n_items, self.spec,
+                      self.stream_spec.row_pad, self.snapshot_dir),
+                daemon=True, name=f"mine-worker-{wid}",
+            )
+            p.start()
+            procs[wid] = p
+        deadline = time.monotonic() + spawn_timeout_s
+        for _ in range(n):
+            chan = self._listener.accept(max(deadline - time.monotonic(), 0.1))
+            hello = chan.recv(max(deadline - time.monotonic(), 0.1))
+            if hello.get("op") != pr.OP_HELLO:
+                raise pr.ProtocolError(f"expected hello, got {hello!r}")
+            wid = int(hello["worker_id"])
+            self._workers[wid] = WorkerHandle(wid=wid, chan=chan, proc=procs[wid])
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._monitor is not None:
+            self._monitor.join(timeout=5)
+        for w in self._workers.values():
+            if w.alive:
+                try:
+                    self._request(w, {"op": pr.OP_SHUTDOWN}, timeout=5)
+                except Exception:
+                    pass
+            w.chan.close()
+        for w in self._workers.values():
+            w.proc.join(timeout=5)
+            if w.proc.is_alive():
+                w.proc.kill()
+                w.proc.join(timeout=5)
+        self._listener.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # --------------------------------------------------------------- rpc
+    def _live(self) -> list[WorkerHandle]:
+        return [w for w in self._workers.values() if w.alive]
+
+    def _loads(self) -> dict[int, int]:
+        loads = {w.wid: 0 for w in self._live()}
+        for m in self._segments.values():
+            if m.worker in loads:
+                loads[m.worker] += m.nbytes
+        return loads
+
+    def _send(self, w: WorkerHandle, body: dict) -> int:
+        if not w.alive:
+            raise WorkerDied(w.wid, "already marked dead")
+        msg = dict(body)
+        msg["seq"] = w.next_seq
+        w.next_seq += 1
+        try:
+            w.chan.send(msg)
+        except (pr.ConnectionClosed, OSError) as e:
+            raise WorkerDied(w.wid, str(e)) from e
+        return msg["seq"]
+
+    def _expect(self, w: WorkerHandle, seq: int, timeout: float | None = None):
+        """The reply for ``seq``, skipping stale frames: after an aborted
+        (failed-over) query, a surviving worker may still flush replies
+        for waves this coordinator stopped caring about."""
+        timeout = self.rpc_timeout_s if timeout is None else timeout
+        while True:
+            try:
+                rep = w.chan.recv(timeout)
+            except (pr.ConnectionClosed, TimeoutError, pr.ProtocolError) as e:
+                raise WorkerDied(w.wid, str(e)) from e
+            got = rep.get("seq", -1)
+            if got < seq:
+                continue  # stale reply from an aborted pipeline
+            if got > seq:
+                raise pr.ProtocolError(
+                    f"worker {w.wid}: reply seq {got} overtook expected {seq}"
+                )
+            if not rep.get("ok", False):
+                raise RuntimeError(f"worker {w.wid} op failed: {rep.get('error')}")
+            return rep
+
+    def _request(self, w: WorkerHandle, body: dict, timeout: float | None = None):
+        return self._expect(w, self._send(w, body), timeout)
+
+    # ------------------------------------------------------------ failover
+    def _mark_dead(self, wid: int) -> None:
+        w = self._workers[wid]
+        if not w.alive:
+            return
+        w.alive = False
+        w.chan.close()
+        self.stats["workers_lost"] += 1
+
+    def _failover(self, wid: int) -> None:
+        """Topology change: retire ``wid``, re-place its segments over the
+        survivors (best-fit decreasing), each restored snapshot-first —
+        same build_segment, same key, so zero recompute when the store
+        holds it. Survivor deaths during the re-place loop fold in."""
+        self._mark_dead(wid)
+        self.stats["failovers"] += 1
+        while True:
+            orphans = [
+                m for m in self._segments.values()
+                if not self._workers[m.worker].alive
+            ]
+            if not orphans:
+                return
+            loads = self._loads()
+            if not loads:
+                raise NoLiveWorkers(
+                    f"all {self.stats['workers_spawned']} workers are gone"
+                )
+            plan = placement.replan([(m.seg_id, m.nbytes) for m in orphans], loads)
+            try:
+                for seg_id in sorted(plan):
+                    m = self._segments[seg_id]
+                    rep = self._prep_on(self._workers[plan[seg_id]], m)
+                    m.worker = plan[seg_id]
+                    self.stats["reassigned_segments"] += 1
+                    if rep["source"] == "snapshot":
+                        self.stats["reassign_snapshot_restores"] += 1
+                    else:
+                        self.stats["reassign_rebuilds"] += 1
+                return
+            except WorkerDied as e:
+                self._mark_dead(e.worker_id)
+                continue
+
+    def _prep_on(self, w: WorkerHandle, m: SegmentMeta):
+        return self._request(w, {
+            "op": pr.OP_PREP, "seg_id": m.seg_id, "rows": m.rows,
+            "local_items": m.local_items, "n_rows_real": m.n_rows_real,
+        })
+
+    def kill_worker(self, wid: int) -> None:
+        """Hard-kill one worker process (chaos / smoke hook). The death is
+        *not* marked here — detection is the coordinator's job, via the
+        next RPC failure or a missed heartbeat."""
+        self._workers[wid].proc.kill()
+        self._workers[wid].proc.join(timeout=10)
+
+    def inject_fault(self, wid: int, fault_op: str, *, after: int = 0,
+                     when: str = "before") -> None:
+        """Arm a deterministic in-worker death (repro.fault posture): the
+        worker exits on its ``after``-th next request matching
+        ``fault_op`` — ``when='before'`` drops the request mid-op (no
+        reply), ``when='after_reply'`` dies between ops."""
+        with self._op_lock:
+            self._request(self._workers[wid], {
+                "op": pr.OP_INJECT, "fault_op": fault_op,
+                "after": after, "when": when,
+            })
+
+    def worker_stats(self) -> dict[int, dict]:
+        """Per-live-worker telemetry (prep/snapshot/wave counters)."""
+        with self._op_lock:
+            out = {}
+            for w in self._live():
+                out[w.wid] = self._request(w, {"op": pr.OP_STATS})
+            return out
+
+    # -------------------------------------------------------------- append
+    def append(self, rows_batch) -> dict:
+        """Ingest one batch: register it in the global rank space, place
+        it on the least-loaded worker, fold the returned F2 block into
+        the global C — the map step runs remotely, the Job 1/F2 reduce
+        here."""
+        rows = np.array(rows_batch, np.int32, copy=True)
+        if rows.ndim != 2:
+            raise ValueError(f"rows batch must be 2-D (R, L), got shape {rows.shape}")
+        if rows.size and int(rows.max()) >= self.n_items:
+            raise ValueError(
+                f"batch contains item id {int(rows.max())} >= n_items={self.n_items}"
+            )
+        t0 = time.perf_counter()
+        with self._op_lock:
+            hist = enc.item_support(rows, self.n_items)
+            new_items = self.db.register_batch(hist)
+            self.db.n_rows += len(rows)
+            self.stats["appends"] += 1
+            source = "empty"
+            if hist.sum() > 0:
+                local_items = self.db.present_in_order(hist)
+                seg_id = self._next_seg
+                self._next_seg += 1
+                m = SegmentMeta(
+                    seg_id=seg_id, rows=rows, n_rows_real=len(rows),
+                    local_items=local_items, worker=-1,
+                )
+                while True:
+                    loads = self._loads()
+                    if not loads:
+                        raise NoLiveWorkers("no live workers to place the batch on")
+                    wid = placement.choose_worker(loads)
+                    try:
+                        rep = self._prep_on(self._workers[wid], m)
+                        break
+                    except WorkerDied as e:
+                        self._failover(e.worker_id)
+                gr = self.db.rank_of[local_items]
+                self.db.C[np.ix_(gr, gr)] += np.asarray(rep["C"], np.int64)
+                m.worker = wid
+                m.nbytes = int(rep["nbytes"])
+                m.prep_bytes = int(rep["prep_bytes"])
+                m.digest = self._padded_digest(rows)
+                self._segments[seg_id] = m
+                source = rep["source"]
+            else:
+                self.stats["empty_batches"] += 1
+            return {
+                "rows": int(len(rows)),
+                "total_rows": int(self.db.n_rows),
+                "segments": len(self._segments),
+                "new_items": int(len(new_items)),
+                "prep_source": source,
+                "worker": int(self._segments[self._next_seg - 1].worker)
+                if source != "empty" else -1,
+                "append_s": time.perf_counter() - t0,
+            }
+
+    def _padded_digest(self, rows: np.ndarray) -> str:
+        pad = self.stream_spec.row_pad
+        rp = -(-len(rows) // pad) * pad
+        if rp != len(rows):
+            padded = np.full((rp, rows.shape[1]), enc.PAD, np.int32)
+            padded[: len(rows)] = rows
+            rows = padded
+        return _digest(rows)[2]
+
+    # --------------------------------------------------------------- query
+    def mine(self, spec: MineSpec) -> MineResult:
+        """One exact query: plan centrally, execute waves on the workers,
+        sum supports, threshold. A worker death mid-query triggers
+        failover and a full replay — planning is deterministic, so the
+        replayed query answers bit-identically."""
+        if spec.algorithm != "hprepost":
+            raise ValueError(
+                f"distributed queries run on the hprepost backend, got {spec.algorithm!r}"
+            )
+        if self._fe._device_config(spec) != self._device_cfg:
+            raise ValueError(
+                "query device config differs from the database's; segments were "
+                "packed under the creation spec — open a new database to change knobs"
+            )
+        self._fe._check_patterns(spec)
+        t0 = time.perf_counter()
+        with self._op_lock:
+            while True:
+                try:
+                    return self._mine_once(spec, t0)
+                except WorkerDied as e:
+                    self._failover(e.worker_id)
+                    self.stats["query_retries"] += 1
+
+    def _mine_once(self, spec: MineSpec, t0: float) -> MineResult:
+        items = np.asarray(self.db.order, np.int32)
+        sups = self.db.counts[items] if len(items) else np.zeros(0, np.int64)
+        C = self.db.C.copy()
+        n_rows = self.db.n_rows
+        min_count = spec.resolve(max(n_rows, 1))
+        if len(items) > spec.max_f1:
+            raise ValueError(
+                f"|stream F-list|={len(items)} exceeds max_f1={spec.max_f1}"
+            )
+        executor = RemoteSegmentExecutor(self, items)
+        res = self._miner.mine_prepared_segments(
+            None, items, sups, C, min_count, max_k=spec.max_k,
+            peak_base=sum(m.prep_bytes for m in self._segments.values()),
+            executor=executor,
+        )
+        executor.finish()
+        self.stats["queries"] += 1
+        out = self._fe._finish(
+            res.itemsets, res.total_count, res.n_explicit, res.peak_bytes,
+            dict(self._miner.last_stage_times), res.flist_items,
+            spec=spec, min_count=min_count, n_rows=n_rows, t0=t0, prep_shared=True,
+        )
+        out.service_stats.update(
+            prep_source="distributed",
+            stream_segments=len(self._segments),
+            stream_digest=self._db_digest(),
+            workers=len(self._live()),
+        )
+        return out
+
+    def _db_digest(self) -> str:
+        h = hashlib.sha1()
+        for sid in sorted(self._segments):
+            h.update(self._segments[sid].digest.encode())
+        h.update(str(self.db.n_rows).encode())
+        return h.hexdigest()
+
+    # ------------------------------------------------------------ heartbeat
+    def _monitor_loop(self) -> None:
+        """Ping live workers every ``heartbeat_s``; a missed beat retires
+        the worker and re-places its segments. Skips a cycle whenever an
+        operation holds the lock — a busy worker is not a dead worker."""
+        while not self._stop.wait(self.heartbeat_s):
+            if not self._op_lock.acquire(blocking=False):
+                continue
+            try:
+                for w in list(self._live()):
+                    try:
+                        self._request(
+                            w, {"op": pr.OP_PING},
+                            timeout=max(self.heartbeat_s * 4, 2.0),
+                        )
+                    except WorkerDied as e:
+                        try:
+                            self._failover(e.worker_id)
+                        except NoLiveWorkers:
+                            pass  # surfaced by the next append/mine
+            finally:
+                self._op_lock.release()
+
+    def flush(self) -> None:  # StreamingMiner surface parity (no-op here)
+        return None

@@ -1,0 +1,95 @@
+"""Socket plumbing for the RPC layer: a ``Listener`` the coordinator
+binds on loopback, ``dial`` for workers to connect back, and a ``Channel``
+wrapping one connected socket with framed send/recv (``protocol``).
+
+Loopback TCP rather than multiprocessing pipes on purpose: the framing +
+dial-in shape is exactly what a multi-host deployment needs — moving a
+worker to another machine changes the address, not the protocol.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+
+from repro.mining.distributed.protocol import ConnectionClosed, recv_msg, send_msg
+
+
+class Channel:
+    """One connected peer. ``send`` is locked (heartbeat and caller
+    threads may both write); ``recv`` is single-consumer by design."""
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._send_lock = threading.Lock()
+        self._closed = False
+
+    def send(self, obj) -> None:
+        with self._send_lock:
+            if self._closed:
+                raise ConnectionClosed("channel closed")
+            try:
+                send_msg(self.sock, obj)
+            except (ConnectionResetError, BrokenPipeError, OSError) as e:
+                raise ConnectionClosed(str(e)) from e
+
+    def recv(self, timeout: float | None = None):
+        self.sock.settimeout(timeout)
+        try:
+            return recv_msg(self.sock)
+        except socket.timeout as e:
+            raise TimeoutError("rpc reply timed out") from e
+        except OSError as e:
+            raise ConnectionClosed(str(e)) from e
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class Listener:
+    """Coordinator-side accept socket on an OS-assigned loopback port."""
+
+    def __init__(self, host: str = "127.0.0.1"):
+        self.sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self.sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self.sock.bind((host, 0))
+        self.sock.listen(64)
+        self.address: tuple[str, int] = self.sock.getsockname()
+
+    def accept(self, timeout: float | None = None) -> Channel:
+        self.sock.settimeout(timeout)
+        try:
+            conn, _ = self.sock.accept()
+        except socket.timeout as e:
+            raise TimeoutError("no worker dialed in before the deadline") from e
+        return Channel(conn)
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+def dial(address: tuple[str, int], *, timeout: float = 30.0) -> Channel:
+    """Worker-side connect with retry (the coordinator's listener is up
+    before workers spawn, so retries only cover transient refusals)."""
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            sock = socket.create_connection(address, timeout=5.0)
+            sock.settimeout(None)
+            return Channel(sock)
+        except OSError:
+            if time.monotonic() >= deadline:
+                raise
+            time.sleep(0.05)

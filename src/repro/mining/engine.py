@@ -116,12 +116,14 @@ class MiningEngine:
             snapshot_store = SnapshotStore(snapshot_dir, byte_budget=snapshot_bytes)
         self.snapshot_store = snapshot_store
         # engine-lifetime fingerprint memo: id(array) -> (weakref, fp,
-        # frozen); compacted (dead weakrefs dropped) when it reaches
-        # _fp_sweep_at, which doubles past the live count so sweeps stay
-        # amortized O(1). ``frozen`` records that the memo itself made the
-        # array read-only (see _fingerprint) and must restore writeability
-        # on invalidation.
-        self._fp_memo: dict[int, tuple[weakref.ref, tuple, bool]] = {}
+        # frozen, sample); compacted (dead weakrefs dropped) when it
+        # reaches _fp_sweep_at, which doubles past the live count so
+        # sweeps stay amortized O(1). ``frozen`` records that the memo
+        # itself made the array read-only (see _fingerprint) and must
+        # restore writeability on invalidation; ``sample`` is the
+        # stride-sampled digest re-checked on every hit (catches
+        # mutation through pre-existing writeable views).
+        self._fp_memo: dict[int, tuple[weakref.ref, tuple, bool, str]] = {}
         self._fp_sweep_at = 1024
         # live streaming databases (repro.mining.stream), by name; each
         # StreamingMiner serializes its own appends/queries internally
@@ -170,6 +172,19 @@ class MiningEngine:
         digest = hashlib.sha1(arr.tobytes()).hexdigest()
         return (arr.shape, str(arr.dtype), digest)
 
+    @staticmethod
+    def _sample_digest(arr: np.ndarray) -> str:
+        """Stride-sampled content digest — the cheap guard re-checked on
+        every memo hit. Hashes at most ~64KiB of the array's bytes (every
+        byte for arrays at or under that size, so the guard is exact
+        there), keeping hit-path cost O(1)-ish while making a mutation
+        that slips past it require every changed byte to fall between
+        sample strides. Requires a C-contiguous array; the memo only
+        admits those."""
+        buf = arr.view(np.uint8).reshape(-1)
+        step = max(1, buf.size // 65536)
+        return hashlib.sha1(buf[::step].tobytes()).hexdigest()
+
     def _fingerprint(self, rows) -> tuple:
         """``_digest`` memoized per array object for the engine's lifetime,
         so hot-path submits on a resident database skip the O(R·L) hash.
@@ -190,34 +205,48 @@ class MiningEngine:
         not None) are never memoized — their content can change through
         the base without this array's flags moving.
 
-        Known residual hole: a WRITEABLE VIEW taken *before* the submit
-        keeps its own writeable flag (NumPy does not propagate
-        ``setflags`` to existing views), so writing through it mutates the
-        frozen base undetected. That cannot be closed without re-hashing
-        every lookup; callers holding such views must use one of the
-        sanctioned routes above."""
+        The one route the flags cannot police — a WRITEABLE VIEW taken
+        *before* the submit keeps its own writeable flag (NumPy does not
+        propagate ``setflags`` to existing views), so writing through it
+        mutates the frozen base without tripping anything — is guarded by
+        a stride-sampled digest (``_sample_digest``) re-verified on every
+        hit: a mismatch drops the entry and re-hashes in full. The guard
+        is exact for arrays <= 64KiB and probabilistic above (a mutation
+        confined entirely to unsampled bytes passes); callers wanting a
+        hard guarantee still use the sanctioned routes above."""
         arr = np.asarray(rows)
         with self._lock:
             memo = self._fp_memo.get(id(arr))
-            if memo is not None and memo[0]() is arr:
-                if not arr.flags.writeable:
+        was_frozen = False
+        if memo is not None and memo[0]() is arr:
+            if not arr.flags.writeable:
+                if self._sample_digest(arr) == memo[3]:
                     return memo[1]
-                # caller unfroze to mutate: auto-invalidate, re-hash below
-                del self._fp_memo[id(arr)]
+                # mutated through a pre-existing writeable view: the
+                # entry is stale even though the flags never moved.
+                # Remember that the memo froze this array so the fresh
+                # entry still thaws it on invalidation.
+                was_frozen = memo[2]
+            # else: caller unfroze to mutate — auto-invalidate
+            with self._lock:
+                self._fp_memo.pop(id(arr), None)
         fp = self._digest(arr)
         if arr.base is not None:
             return fp  # view: base mutation is invisible here — no memo
+        if not arr.flags.c_contiguous:
+            return fp  # sample guard needs a flat byte view — no memo
         try:
             ref = weakref.ref(arr)
         except TypeError:
             return fp  # not weakref-able: correctness first, no memo
-        frozen = False
+        frozen = was_frozen
         if arr.flags.writeable:
             try:
                 arr.setflags(write=False)
                 frozen = True
             except ValueError:
                 return fp  # cannot freeze: mutation undetectable — no memo
+        sample = self._sample_digest(arr)
         with self._lock:
             if len(self._fp_memo) >= self._fp_sweep_at:  # drop dead entries
                 self._fp_memo = {
@@ -226,7 +255,7 @@ class MiningEngine:
                 # all-live memos (many resident DBs) must not re-sweep on
                 # every insert: back off to double the surviving size
                 self._fp_sweep_at = max(1024, 2 * len(self._fp_memo))
-            self._fp_memo[id(arr)] = (ref, fp, frozen)
+            self._fp_memo[id(arr)] = (ref, fp, frozen, sample)
         return fp
 
     def invalidate_fingerprints(self, rows=None) -> None:
@@ -422,6 +451,39 @@ class MiningEngine:
                     )
                 s = StreamingMiner(
                     self, n_items, spec=spec, stream_spec=stream_spec, name=name
+                )
+                self._streams[name] = s
+            elif n_items is not None and n_items != s.n_items:
+                raise ValueError(
+                    f"stream {name!r} was created with n_items={s.n_items}, got {n_items}"
+                )
+            return s
+
+    def distribute(self, name: str = "default", *, n_items: int | None = None,
+                   workers: int = 2, spec: MineSpec | None = None,
+                   stream_spec=None, snapshot_dir: str | None = None,
+                   heartbeat_s: float = 0.0, **kw):
+        """The named ``DistributedMiner`` (coordinator + ``workers`` spawned
+        worker processes), created on first touch. It registers under the
+        same namespace as ``stream``, so ``engine.append`` /
+        ``engine.submit_stream`` — and therefore the ``MiningService``
+        submit path — serve distributed databases unchanged. Workers share
+        the engine's snapshot directory by default (the failover warm
+        path); pass ``snapshot_dir`` to point them elsewhere."""
+        from repro.mining.distributed import DistributedMiner
+
+        with self._lock:
+            s = self._streams.get(name)
+            if s is None:
+                if n_items is None:
+                    raise ValueError(
+                        f"distributed db {name!r} does not exist yet; "
+                        "pass n_items to create it"
+                    )
+                s = DistributedMiner(
+                    self, n_items, workers=workers, spec=spec,
+                    stream_spec=stream_spec, snapshot_dir=snapshot_dir,
+                    heartbeat_s=heartbeat_s, name=name, **kw
                 )
                 self._streams[name] = s
             elif n_items is not None and n_items != s.n_items:

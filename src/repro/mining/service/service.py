@@ -131,6 +131,13 @@ class MiningService:
             lambda: self.engine.submit_stream(spec, stream=stream)
         )
 
+    def distribute(self, name: str = "default", **kw):
+        """Create/fetch a distributed database (``engine.distribute``) —
+        synchronous, since it spawns worker processes, not a mining op.
+        Once created, ``append`` / ``submit_stream`` on its name serve it
+        through the ordinary Future path, worker failover included."""
+        return self.engine.distribute(name, **kw)
+
     def sweep(self, rows, n_items: int, spec: MineSpec,
               min_sups: Sequence[float]) -> list[Future]:
         """The paper's threshold sweep, submitted concurrently — the batch

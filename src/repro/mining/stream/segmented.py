@@ -57,6 +57,20 @@ class Segment:
         return int(self.rows.nbytes)
 
 
+def segment_handles(segments: "list[Segment]", order_arr: np.ndarray) -> list[SegmentHandle]:
+    """Wave handles for ``segments`` against a global rank space given as
+    ``order_arr`` (rank -> item). ``g2l`` routes ranks a segment never saw
+    (items first seen in later batches, or absent from it) to the sentinel
+    row. Shared by ``SegmentedDB.handles`` and the distributed worker,
+    whose query_begin receives ``order_arr`` from the coordinator."""
+    out = []
+    for s in segments:
+        loc = s.item_to_local[order_arr]
+        g2l = np.where(loc >= 0, loc, s.k).astype(np.int32)
+        out.append(SegmentHandle(packed=s.packed_ext, singleton=s.singleton_ext, g2l=g2l))
+    return out
+
+
 class SegmentedDB:
     """Ordered segments + merged global state for one stream."""
 
@@ -129,15 +143,8 @@ class SegmentedDB:
 
     def handles(self) -> list[SegmentHandle]:
         """Per-segment wave handles against the *current* global rank
-        space. ``g2l`` routes ranks the segment never saw (items first
-        seen in later batches, or absent from it) to the sentinel row."""
-        order_arr = np.asarray(self.order, np.int32)
-        out = []
-        for s in self.segments:
-            loc = s.item_to_local[order_arr]
-            g2l = np.where(loc >= 0, loc, s.k).astype(np.int32)
-            out.append(SegmentHandle(packed=s.packed_ext, singleton=s.singleton_ext, g2l=g2l))
-        return out
+        space (module-level ``segment_handles`` over this db's order)."""
+        return segment_handles(self.segments, np.asarray(self.order, np.int32))
 
     def digest(self) -> str:
         """Segment-set digest: identifies the exact segment layout (used

@@ -47,6 +47,86 @@ from repro.mining.stream.spec import StreamSpec
 _digest = MiningEngine._digest
 
 
+def segment_key(digest: tuple, local_items: np.ndarray, n_items: int,
+                device_cfg, n_shards: int) -> str:
+    """On-disk identity of a segment build: the batch content, the imposed
+    item order (the same rows appended into a different stream history pack
+    differently!), the device config, and the shard count. Shared by the
+    streaming miner and the distributed workers — agreeing on this key is
+    what lets a surviving worker warm-restore a dead peer's segments."""
+    from repro.mining.service.store import SnapshotStore
+
+    items_digest = hashlib.sha1(
+        np.ascontiguousarray(local_items, np.int32).tobytes()
+    ).hexdigest()
+    return SnapshotStore.key_for(
+        "hprepost-seg", digest, n_items,
+        {"cfg": dataclasses.asdict(device_cfg), "stream_items": items_digest},
+        n_shards,
+    )
+
+
+def build_segment(miner, store, n_items: int, rows: np.ndarray, n_rows_real: int,
+                  hist: np.ndarray, local_items: np.ndarray, *, seg_id: int,
+                  device_cfg, row_pad: int, stats: dict) -> tuple[Segment, str]:
+    """Prepare one batch as a segment: snapshot warm-start when ``store``
+    already holds this (rows, imposed item order, device config) triple,
+    else run the prep stages on the batch. ``stats`` gets the
+    ``seg_prepares`` / ``seg_snapshot_*`` counters bumped in place. The
+    single implementation behind ``StreamingMiner.append`` and the
+    distributed worker's prep op — both must build byte-identical
+    segments (and snapshot keys) for failover to be zero-recompute."""
+    R0 = len(rows)
+    Rp = -(-R0 // row_pad) * row_pad
+    if Rp != R0:
+        padded = np.full((Rp, rows.shape[1]), enc.PAD, np.int32)
+        padded[:R0] = rows
+        rows = padded
+    fl = enc.FList(
+        items=local_items,
+        supports=hist[local_items].astype(np.int64),
+        n_items=n_items,
+        min_count=1,
+    )
+    digest = _digest(rows)
+    key = segment_key(digest, local_items, n_items, device_cfg, miner.D)
+    prepared = None
+    source = "built"
+    if store is not None:
+        try:
+            payload = store.get(key)
+        except Exception:
+            payload = None
+        if payload is not None:
+            try:
+                prepared = PreparedDB.from_host(payload, miner)
+            except ValueError:
+                prepared = None
+        if prepared is not None:
+            stats["seg_snapshot_hits"] += 1
+            source = "snapshot"
+        else:
+            stats["seg_snapshot_misses"] += 1
+    if prepared is None:
+        prepared = miner.prepare(rows, n_items, 1, flist=fl)
+        stats["seg_prepares"] += 1
+        if store is not None:
+            try:
+                store.put(key, prepared.to_host())
+            except Exception:
+                stats["seg_snapshot_spill_failures"] += 1
+    packed_ext, singleton_ext = miner.extend_with_sentinel(prepared)
+    item_to_local = np.full(n_items, -1, np.int32)
+    item_to_local[local_items] = np.arange(len(local_items), dtype=np.int32)
+    seg = Segment(
+        seg_id=seg_id, rows=rows, n_rows=int(n_rows_real),
+        prepared=prepared, packed_ext=packed_ext, singleton_ext=singleton_ext,
+        local_items=local_items, item_to_local=item_to_local,
+        digest=digest[2],
+    )
+    return seg, source
+
+
 class StreamingMiner:
     """One live, append-only mining stream bound to a ``MiningEngine``.
 
@@ -119,76 +199,26 @@ class StreamingMiner:
 
     def _build_segment(self, rows: np.ndarray, n_rows_real: int,
                        hist: np.ndarray, local_items: np.ndarray) -> tuple[Segment, str]:
-        """Prepare one batch as a segment: snapshot warm-start when the
-        engine's store already holds this (rows, imposed item order,
-        device config) triple, else run the prep stages on the batch."""
-        ss = self.stream_spec
-        R0 = len(rows)
-        Rp = -(-R0 // ss.row_pad) * ss.row_pad
-        if Rp != R0:
-            padded = np.full((Rp, rows.shape[1]), enc.PAD, np.int32)
-            padded[:R0] = rows
-            rows = padded
-        fl = enc.FList(
-            items=local_items,
-            supports=hist[local_items].astype(np.int64),
-            n_items=self.n_items,
-            min_count=1,
+        """Prepare one batch as a segment (module-level ``build_segment``
+        with this stream's miner/store/config bound)."""
+        # seg-id allocation must be atomic: an append (stream lock held)
+        # and an async compaction job (deliberately outside the lock)
+        # both build segments, and a duplicated id would let
+        # replace_segments clobber a live segment
+        with self._lock:
+            seg_id = self._next_seg
+            self._next_seg += 1
+        seg, source = build_segment(
+            self.miner, self.engine.snapshot_store, self.n_items,
+            rows, n_rows_real, hist, local_items,
+            seg_id=seg_id, device_cfg=self._device_cfg,
+            row_pad=self.stream_spec.row_pad, stats=self.stats,
         )
-        digest = _digest(rows)
-        key = self._segment_key(digest, local_items)
-        store = self.engine.snapshot_store
-        prepared = None
-        source = "built"
-        if store is not None:
-            try:
-                payload = store.get(key)
-            except Exception:
-                payload = None
-            if payload is not None:
-                try:
-                    prepared = PreparedDB.from_host(payload, self.miner)
-                except ValueError:
-                    prepared = None
-            if prepared is not None:
-                self.stats["seg_snapshot_hits"] += 1
-                source = "snapshot"
-            else:
-                self.stats["seg_snapshot_misses"] += 1
-        if prepared is None:
-            prepared = self.miner.prepare(rows, self.n_items, 1, flist=fl)
-            self.stats["seg_prepares"] += 1
-            if store is not None:
-                try:
-                    store.put(key, prepared.to_host())
-                except Exception:
-                    self.stats["seg_snapshot_spill_failures"] += 1
-        packed_ext, singleton_ext = self.miner.extend_with_sentinel(prepared)
-        item_to_local = np.full(self.n_items, -1, np.int32)
-        item_to_local[local_items] = np.arange(len(local_items), dtype=np.int32)
-        seg = Segment(
-            seg_id=self._next_seg, rows=rows, n_rows=int(n_rows_real),
-            prepared=prepared, packed_ext=packed_ext, singleton_ext=singleton_ext,
-            local_items=local_items, item_to_local=item_to_local,
-            digest=digest[2],
-        )
-        self._next_seg += 1
         return seg, source
 
     def _segment_key(self, digest: tuple, local_items: np.ndarray) -> str:
-        """On-disk identity of a segment build: the batch content, the
-        imposed item order (the same rows appended into a different stream
-        history pack differently!), the device config, and the shard
-        count."""
-        from repro.mining.service.store import SnapshotStore
-
-        items_digest = hashlib.sha1(
-            np.ascontiguousarray(local_items, np.int32).tobytes()
-        ).hexdigest()
-        return SnapshotStore.key_for(
-            "hprepost-seg", digest, self.n_items,
-            {"cfg": dataclasses.asdict(self._device_cfg), "stream_items": items_digest},
-            self.miner.D,
+        return segment_key(
+            digest, local_items, self.n_items, self._device_cfg, self.miner.D
         )
 
     # --------------------------------------------------------------- query

@@ -246,3 +246,27 @@ def test_in_place_mutation_cannot_serve_stale_prep():
     assert eng.cache_info()["entries"] == 2
     # the resubmitted array is frozen again (memoized anew)
     assert not rows.flags.writeable
+
+
+def test_preexisting_writeable_view_cannot_serve_stale_prep():
+    """The residual memo hole, closed: a writeable view taken *before*
+    the first submit keeps its own writeable flag when the memo freezes
+    the base, so writing through it mutates the frozen array without
+    tripping any flag. The stride-sampled digest re-checked on every hit
+    catches the changed bytes and forces a full re-hash + re-prepare."""
+    rows, n_items = _db(17)
+    view = rows[: len(rows) // 2]  # writeable view, taken before submit
+    eng = MiningEngine()
+    first = eng.submit(rows, n_items, SPEC)
+    assert not rows.flags.writeable and view.flags.writeable
+
+    view[0, :] = view[1, :]  # mutates the frozen base, no flag moves
+    res = eng.submit(rows, n_items, SPEC)
+    fresh = MiningEngine().submit(rows.copy(), n_items, SPEC)
+    assert res.itemsets == fresh.itemsets
+    del first
+    # the stale hit was detected: a second content entry, nothing reused
+    assert eng.cache_info()["entries"] == 2
+    # the re-memoized entry still remembers the memo froze this array
+    eng.invalidate_fingerprints(rows)
+    assert rows.flags.writeable
