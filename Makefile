@@ -25,6 +25,10 @@
 #                       sweep, hard-kill one worker, re-mine — fails unless
 #                       the answers are bit-identical and the re-assigned
 #                       segments restored from snapshots without a rebuild
+#   make tune-smoke   - kernel autotuner end-to-end: a cold process runs the
+#                       timed block search and persists kernel_plans.json
+#                       next to the snapshot dir; a second process must serve
+#                       every plan from disk with zero search trials
 #   make bench-gate   - regression gate: diff the current BENCH_PR*.json
 #                       against the previous PR's trajectory and fail if a
 #                       tracked row slowed past tolerance
@@ -35,8 +39,9 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 SERVE_SNAP := .serve-smoke-snapshots
 STREAM_SNAP := .stream-smoke-snapshots
 DIST_SNAP := .dist-smoke-snapshots
+TUNE_SNAP := .tune-smoke-snapshots
 
-.PHONY: test test-tier1 bench-smoke bench-json bench-gate mine-smoke serve-smoke stream-smoke dist-smoke
+.PHONY: test test-tier1 bench-smoke bench-json bench-gate mine-smoke serve-smoke stream-smoke dist-smoke tune-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -78,6 +83,14 @@ dist-smoke:
 		--snapshot-dir $(DIST_SNAP) \
 		--dataset mushroom --scale 0.05 --sweep 0.4,0.3 --max-k 4
 	rm -rf $(DIST_SNAP)
+
+tune-smoke:
+	rm -rf $(TUNE_SNAP)
+	$(PY) -m repro.launch.mine --tune --snapshot-dir $(TUNE_SNAP) \
+		--dataset mushroom --scale 0.05 --min-sup 0.3 --max-k 4 --expect-plans cold
+	$(PY) -m repro.launch.mine --tune --snapshot-dir $(TUNE_SNAP) \
+		--dataset mushroom --scale 0.05 --min-sup 0.3 --max-k 4 --expect-plans warm
+	rm -rf $(TUNE_SNAP)
 
 bench-gate:
 	$(PY) -m benchmarks.bench_gate

@@ -59,6 +59,8 @@ def run() -> list[tuple[str, float, str]]:
     )
     out.extend(run_host_planning())
     out.extend(run_miners())
+    out.extend(run_early_stop())
+    out.extend(run_tuned_blocks())
     return out
 
 
@@ -149,6 +151,69 @@ def run_host_planning() -> list[tuple[str, float, str]]:
     return [
         (f"wave_plan_vec_C{n3}", _time(plan_vec, reps=10), "host/vectorized"),
         (f"wave_plan_loop_C{n3}", _time(plan_loop, reps=3), "host/baseline"),
+    ]
+
+
+def run_early_stop(reps: int = 5) -> list[tuple[str, float, str]]:
+    """PR 7 headline: warm end-to-end mine with early stopping on vs off at
+    the smallest benchmarked threshold (deep waves — where the Apriori-
+    closure host prune has subsets to check and candidates to drop). Both
+    variants share one PreparedDB cache entry (execution-only knobs are
+    normalized out of the key), so the comparison is pure wave cost; the
+    answers are bit-identical by the parity suite."""
+    from repro.data.synth import load
+    from repro.mining import MineSpec, MiningEngine
+
+    rows, n_items = load("mushroom", scale=0.05)
+    engine = MiningEngine()
+    out = []
+    for es in (True, False):
+        spec = MineSpec(algorithm="hprepost", min_sup=0.15, max_k=6,
+                        candidate_unit=32, early_stop=es)
+        res = engine.submit(rows, n_items, spec)  # warm (compile + shared prep)
+        walls, pruned = [], 0
+        for _ in range(reps):
+            res = engine.submit(rows, n_items, spec)
+            walls.append(res.wall_time_s)
+        st = res.stage_times_s
+        pruned = int(st.get("host_pruned_parent", 0) + st.get("host_pruned_subset", 0))
+        out.append((
+            f"mine_hprepost_mushroom0.05_sup0.15_early_stop_{'on' if es else 'off'}",
+            min(walls) * 1e6,
+            f"pruned={pruned}/{int(st.get('planned_candidates', 0)) + pruned}, "
+            f"best of {reps}",
+        ))
+    return out
+
+
+def run_tuned_blocks(reps: int = 3) -> list[tuple[str, float, str]]:
+    """Tuned vs default block config on the one backend whose blocks matter
+    on CPU: the Pallas interpreter (grid iterations are Python loops, so
+    block shape moves real wall time). The tuner searches in memory; the
+    rows record the default-config launch against the winner."""
+    from repro.kernels.nlist_intersect.ops import nlist_intersect
+    from repro.mining.tune import KernelTuner, _synthetic_nlists
+
+    B, W = 32, 128
+    a_pre, a_post, a_cnt, y_pre, y_post, y_cnt = _synthetic_nlists(B, W)
+    tuner = KernelTuner()  # in-memory: search cost is not part of the rows
+    plan = tuner.plan_for(backend="pallas-interpret", B=B, W=W, early_stop=True)
+
+    def launch(la, ly, bb):
+        return nlist_intersect(
+            a_pre, a_post, y_pre, y_post, y_cnt, a_cnt=a_cnt,
+            backend="pallas-interpret", la_block=la, ly_block=ly,
+            batch_block=bb, early_stop=True, min_count=2,
+        )
+
+    default_us = _time(lambda: launch(512, 512, 8), reps=reps)
+    tuned_us = _time(
+        lambda: launch(plan.la_block, plan.ly_block, plan.batch_block), reps=reps
+    )
+    cfg = f"la{plan.la_block}xly{plan.ly_block}xbb{plan.batch_block}"
+    return [
+        (f"nlist_intersect_interpret_B{B}_{W}x{W}_default", default_us, "512x512x8"),
+        (f"nlist_intersect_interpret_B{B}_{W}x{W}_tuned", tuned_us, cfg),
     ]
 
 

@@ -68,9 +68,29 @@ class HPrepostConfig:
     pipeline_waves: bool = True  # dispatch wave l+1 before blocking on wave
     # l's supports: host candidate generation overlaps device execution; the
     # one-wave speculation is sound because support is anti-monotone
-    backend: str = "auto"  # kernel dispatch: auto | pallas | jnp
+    backend: str = "auto"  # a repro.mining.tune registry name (auto | pallas
+    # | jnp | pallas-tpu | pallas-gpu | pallas-interpret)
     max_f1: int = 4096  # guard on |F-list| (F2 matrix is K^2)
     max_itemsets: int = 2_000_000
+    early_stop: bool = True  # early-stopping intersections (arXiv:1901.07773):
+    # host-side Apriori-closure pruning of doomed candidates before they ship,
+    # plus in-kernel bound masking on Pallas backends when supports are final
+    # (single data shard, non-segmented). False = the exact legacy path,
+    # bit-for-bit.
+    tune: bool = False  # resolve block knobs through the persisted KernelTuner
+    # instead of the static la/ly/batch_block fields
+
+    # knobs that pick *how* waves execute but never change what ``prepare``
+    # builds — stripped (normalized to defaults) from prep cache and
+    # snapshot keys so a retune or backend switch reuses warm preps
+    EXECUTION_ONLY = ("la_block", "ly_block", "batch_block", "backend",
+                      "early_stop", "tune")
+
+    def prep_key(self) -> "HPrepostConfig":
+        """This config with execution-only knobs normalized away — the
+        identity ``PreparedDB`` caches and snapshots key on."""
+        defaults = {f: getattr(HPrepostConfig, f) for f in self.EXECUTION_ONLY}
+        return dataclasses.replace(self, **defaults)
 
 
 @dataclasses.dataclass
@@ -239,9 +259,14 @@ class LocalSegmentExecutor:
         short-circuits the wave loop (F1-only result).
       - ``begin()``: reset per-query state to the level-2 singleton
         bootstrap.
-      - ``dispatch(level, parent_arr, base_idx, q_idx, use_local)``:
-        launch one planned wave over every segment; returns an opaque
-        token. Must not block on device results (pipelining).
+      - ``dispatch(level, parent_arr, base_idx, q_idx, use_local,
+        stop_count=0)``: launch one planned wave over every segment;
+        returns an opaque token. Must not block on device results
+        (pipelining). ``stop_count`` is the in-kernel early-stop
+        threshold — segmented supports are partial until the cross-
+        segment reduce, so the planner always passes 0 here (masking
+        against the global threshold would be unsound); host-side
+        pruning carries the early-stop win instead.
       - ``collect(token)``: block, and return the per-candidate supports
         summed over this executor's segments as an int64 host vector —
         the paper's reduce step for this partition set.
@@ -263,7 +288,8 @@ class LocalSegmentExecutor:
         self._prev = [h.singleton for h in self.handles]
         self.state_bytes = 0
 
-    def dispatch(self, level, parent_arr, base_idx, q_idx, use_local):
+    def dispatch(self, level, parent_arr, base_idx, q_idx, use_local,
+                 stop_count=0):
         m = self.miner
         wave_fn = m._wave_local if use_local else m._wave
         new_states, parts = [], []
@@ -271,12 +297,19 @@ class LocalSegmentExecutor:
             # level-2 parents are singleton ranks (per-segment rows);
             # later levels gather by global slot, shared by layout
             p_arr = h.g2l[parent_arr] if level == 2 else parent_arr
+            plan = m._kernel_plan(len(parent_arr), h.packed.shape[2])
             new_s, sup_s = wave_fn(
                 h.packed,
                 prev,
                 m._shard(p_arr, m._cand_spec),
                 m._shard(h.g2l[base_idx], m._cand_spec),
                 m._shard(h.g2l[q_idx], m._cand_spec),
+                np.int32(stop_count),
+                la_block=plan.la_block,
+                ly_block=plan.ly_block,
+                batch_block=plan.batch_block,
+                backend=plan.backend,
+                early_stop=plan.early_stop,
             )
             new_states.append(new_s)
             parts.append(sup_s)
@@ -334,7 +367,35 @@ class HPrepostMiner:
         self.stage_counters: dict[str, int] = {
             "job1": 0, "job2": 0, "pack": 0, "f2": 0, "waves": 0
         }
+        # KernelPlan resolution: the owning frontend/engine attaches a
+        # ``KernelTuner`` here; with ``cfg.tune`` off (or no tuner) plans
+        # come straight from the config knobs. Memoized per wave shape.
+        self.tuner = None
+        self._plan_cache: dict[tuple[int, int], Any] = {}
         self._build_jits()
+
+    def _kernel_plan(self, n_cands: int, width: int):
+        """Resolve the execution plan (concrete backend + block knobs) for a
+        wave of ``n_cands`` candidates over ``width``-slot N-lists."""
+        from repro.mining import tune
+
+        key = (tune._bucket(n_cands, 8, 512), tune._bucket(width, 8, 1024))
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            cfg = self.cfg
+            if cfg.tune and self.tuner is not None:
+                plan = self.tuner.plan_for(
+                    backend=cfg.backend, B=n_cands, W=width,
+                    early_stop=cfg.early_stop,
+                    defaults=(cfg.la_block, cfg.ly_block, cfg.batch_block),
+                )
+            else:
+                plan = tune.static_plan(
+                    cfg.backend, cfg.la_block, cfg.ly_block, cfg.batch_block,
+                    cfg.early_stop,
+                )
+            self._plan_cache[key] = plan
+        return plan
 
     @property
     def _da(self):
@@ -410,8 +471,17 @@ class HPrepostMiner:
 
             return shard_map(body, mesh=mesh, in_specs=P(da, None), out_specs=P())(rows)
 
-        @jax.jit
-        def wave(packed, prev_state, parent_idx, base_idx, q_idx):
+        # the resolved KernelPlan rides in as static kwargs: block knobs and
+        # backend pick a lowering, not a value — retraces happen per plan,
+        # exactly like the per-shape-bucket retraces the buffers already pay.
+        # ``stop`` is the dynamic in-kernel early-stop threshold (0 = off; see
+        # mine_prepared for when a nonzero threshold is sound).
+        plan_static = ("la_block", "ly_block", "batch_block", "backend",
+                       "early_stop")
+
+        @functools.partial(jax.jit, static_argnames=plan_static)
+        def wave(packed, prev_state, parent_idx, base_idx, q_idx, stop, *,
+                 la_block, ly_block, batch_block, backend, early_stop):
             # MapReduce shuffle: route parent rows to their candidates
             # (paper-faithful MRPrepost-style partitioning — the take crosses
             # shards and XLA emits the shuffle collectives)
@@ -420,7 +490,7 @@ class HPrepostMiner:
                 state, NamedSharding(mesh, P(da, *cand_spec, None))
             )
 
-            def body(packed, state, base_idx, q_idx):
+            def body(packed, state, base_idx, q_idx, stop):
                 packed, state = packed[0], state[0]  # (K, W, 3), (C_l, W)
                 a = packed[q_idx]
                 y = packed[base_idx]
@@ -428,32 +498,36 @@ class HPrepostMiner:
                 # intersection itself — only the scalar psum leaves the shard
                 new, part = nlist_intersect(
                     a[:, :, 0], a[:, :, 1], y[:, :, 0], y[:, :, 1], state,
-                    backend=cfg.backend, la_block=cfg.la_block,
-                    ly_block=cfg.ly_block, batch_block=cfg.batch_block,
+                    a_cnt=a[:, :, 2], backend=backend, la_block=la_block,
+                    ly_block=ly_block, batch_block=batch_block,
+                    early_stop=early_stop, min_count=stop,
                 )
                 sup = jax.lax.psum(part, da)
                 return new[None], sup
 
             return shard_map(
                 body, mesh=mesh,
-                in_specs=(P(da, None, None, None), P(da, *cand_spec, None), cand_spec, cand_spec),
+                in_specs=(P(da, None, None, None), P(da, *cand_spec, None),
+                          cand_spec, cand_spec, P()),
                 out_specs=(P(da, *cand_spec, None), cand_spec),
-            )(packed, state, base_idx, q_idx)
+            )(packed, state, base_idx, q_idx, stop)
 
-        @jax.jit
-        def wave_local(packed, prev_state, parent_local, base_idx, q_idx):
+        @functools.partial(jax.jit, static_argnames=plan_static)
+        def wave_local(packed, prev_state, parent_local, base_idx, q_idx, stop,
+                       *, la_block, ly_block, batch_block, backend, early_stop):
             # locality-aware dispatch (beyond-paper, §Perf FIM): children sit
             # on their parent's shard, so the parent gather is shard-local —
             # the shuffle disappears; only the support psum remains.
-            def body(packed, prev, pidx, bidx, qidx):
+            def body(packed, prev, pidx, bidx, qidx, stop):
                 packed, prev = packed[0], prev[0]  # (K, W, 3), (Cprev_l, W)
                 state = prev[pidx]  # local rows only
                 a = packed[qidx]
                 y = packed[bidx]
                 new, part = nlist_intersect(
                     a[:, :, 0], a[:, :, 1], y[:, :, 0], y[:, :, 1], state,
-                    backend=cfg.backend, la_block=cfg.la_block,
-                    ly_block=cfg.ly_block, batch_block=cfg.batch_block,
+                    a_cnt=a[:, :, 2], backend=backend, la_block=la_block,
+                    ly_block=ly_block, batch_block=batch_block,
+                    early_stop=early_stop, min_count=stop,
                 )
                 sup = jax.lax.psum(part, da)
                 return new[None], sup
@@ -466,9 +540,10 @@ class HPrepostMiner:
                     cand_spec,
                     cand_spec,
                     cand_spec,
+                    P(),
                 ),
                 out_specs=(P(da, *cand_spec, None), cand_spec),
-            )(packed, prev_state, parent_local, base_idx, q_idx)
+            )(packed, prev_state, parent_local, base_idx, q_idx, stop)
 
         self._job1, self._job2, self._pack, self._jobf2 = job1, job2, pack, jobf2
         self._wave, self._wave_local = wave, wave_local
@@ -507,11 +582,9 @@ class HPrepostMiner:
         # transaction count, so refuse shards that could silently wrap. The
         # jnp path is integer-exact — only the Pallas dispatch is guarded.
         from repro.kernels.nlist_intersect.ops import FP32_EXACT_MAX
+        from repro.mining.tune import is_pallas, resolve_backend
 
-        uses_pallas = cfg.backend == "pallas" or (
-            cfg.backend == "auto" and jax.default_backend() == "tpu"
-        )
-        if uses_pallas and Rp // self.D >= FP32_EXACT_MAX:
+        if is_pallas(resolve_backend(cfg.backend)) and Rp // self.D >= FP32_EXACT_MAX:
             raise ValueError(
                 f"per-shard row count {Rp // self.D} reaches the fp32 exact-"
                 f"integer bound 2^24; shard the database over more devices "
@@ -648,6 +721,35 @@ class HPrepostMiner:
         )
         return new_ranks, slots[cs], q2s.astype(np.int32)
 
+    @staticmethod
+    def _apriori_kept(d_ranks: np.ndarray, surv_ranks: np.ndarray):
+        """Anti-monotone host bound, boolean form: a width-``l+1`` candidate
+        can reach ``min_count`` only if *every* drop-one subset of width
+        ``l`` survived the settled wave — the enumeration guarantees every
+        frequent width-``l`` itemset is in ``surv_ranks``, so a missing
+        subset proves the candidate doomed. Position 0 (the extension item)
+        is the parent the caller already checked; pair subsets are implied
+        by ``pair_ok`` — so this only bites from width 4 up, and returns
+        None below that.
+
+        Membership is vectorized by viewing C-contiguous int32 rank rows as
+        fixed-width byte strings: at equal total width, numpy's trailing-
+        NUL-stripping compare is still an exact row equality."""
+        l1 = d_ranks.shape[1]
+        if l1 < 4 or not len(d_ranks) or not len(surv_ranks):
+            return None
+        w = l1 - 1
+        sv = np.ascontiguousarray(surv_ranks).view(f"S{4 * w}").ravel()
+        kept = np.ones(len(d_ranks), bool)
+        for pos in range(1, l1):
+            sub = np.ascontiguousarray(
+                np.concatenate([d_ranks[:, :pos], d_ranks[:, pos + 1:]], axis=1)
+            )
+            kept &= np.isin(sub.view(f"S{4 * w}").ravel(), sv)
+            if not kept.any():
+                break
+        return kept
+
     def mine_prepared(
         self,
         prepared: PreparedDB,
@@ -683,7 +785,13 @@ class HPrepostMiner:
         fl = prepared.fl
         K = fl.k
         stages = self.last_stage_times = {
-            "job1_flist": 0.0, "job2_ppc_pack": 0.0, "f2_scan": 0.0, "mining_waves": 0.0
+            "job1_flist": 0.0, "job2_ppc_pack": 0.0, "f2_scan": 0.0,
+            "mining_waves": 0.0,
+            # planning counters ride the stage dict into MineResult
+            # stage_times_s: candidates shipped, and candidates the host
+            # bound killed (dead parent / missing Apriori subset)
+            "planned_candidates": 0.0,
+            "host_pruned_parent": 0.0, "host_pruned_subset": 0.0,
         }
         itemsets: dict[tuple[int, ...], int] = {}
         k_act = prepared.k_active(min_count)
@@ -722,6 +830,10 @@ class HPrepostMiner:
         Mb = self._Mb
         slots_per_shard = 0  # of the *previous* wave (for locality bucketing)
         pending = None  # (ranks, slot_of, device supports) of the wave in flight
+        # in-kernel early stop is only sound where the kernel sees *final*
+        # supports: one data shard (no cross-shard psum completes them
+        # later). Off (0) it costs nothing — the mask multiplies by 1.0.
+        stop_count = min_count if (cfg.early_stop and self.D == 1) else 0
 
         t0 = time.perf_counter()
         while len(ranks) or pending is not None:
@@ -730,12 +842,20 @@ class HPrepostMiner:
                 parent_arr, base_idx, q_idx, slot_of, Cpad, wave_fn = self._pack_wave(
                     ranks, parents, qarr, level, slots_per_shard
                 )
+                plan = self._kernel_plan(Cpad, prepared.width)
+                stages["planned_candidates"] += float(len(ranks))
                 new_state, sups = wave_fn(
                     packed,
                     prev_state,
                     self._shard(parent_arr, self._cand_spec),
                     self._shard(base_idx, self._cand_spec),
                     self._shard(q_idx, self._cand_spec),
+                    np.int32(stop_count),
+                    la_block=plan.la_block,
+                    ly_block=plan.ly_block,
+                    batch_block=plan.batch_block,
+                    backend=plan.backend,
+                    early_stop=plan.early_stop,
                 )
                 self.stage_counters["waves"] += 1
                 dispatched = (ranks, parents, slot_of, sups)
@@ -772,7 +892,13 @@ class HPrepostMiner:
                     # supports arrived; drop children of dead parents from
                     # further enumeration (their own supports self-filter)
                     kept = surv_mask[d_parents]
+                    stages["host_pruned_parent"] += float((~kept).sum())
                     d_ranks, d_slot_of = d_ranks[kept], d_slot_of[kept]
+                    if cfg.early_stop:
+                        sub = self._apriori_kept(d_ranks, surv_ranks)
+                        if sub is not None:
+                            stages["host_pruned_subset"] += float((~sub).sum())
+                            d_ranks, d_slot_of = d_ranks[sub], d_slot_of[sub]
                 pending = (d_ranks, d_slot_of, d_sups)
                 ranks, parents, qarr = self._extensions(
                     d_ranks, d_slot_of, pair_packed, prefix_packed, K
@@ -781,6 +907,13 @@ class HPrepostMiner:
                 ranks, parents, qarr = self._extensions(
                     surv_ranks, surv_slots, pair_packed, prefix_packed, K
                 )
+                if cfg.early_stop and len(ranks):
+                    # un-pipelined, the closure check lands *before* dispatch:
+                    # doomed candidates never ship to the device at all
+                    sub = self._apriori_kept(ranks, surv_ranks)
+                    if sub is not None:
+                        stages["host_pruned_subset"] += float((~sub).sum())
+                        ranks, parents, qarr = ranks[sub], parents[sub], qarr[sub]
             else:
                 ranks = np.empty((0, 2), np.int32)
                 parents = np.empty(0, np.int64)
@@ -845,7 +978,10 @@ class HPrepostMiner:
         supports = np.asarray(supports, np.int64)
         K = len(items_arr)
         stages = self.last_stage_times = {
-            "job1_flist": 0.0, "job2_ppc_pack": 0.0, "f2_scan": 0.0, "mining_waves": 0.0
+            "job1_flist": 0.0, "job2_ppc_pack": 0.0, "f2_scan": 0.0,
+            "mining_waves": 0.0,
+            "planned_candidates": 0.0,
+            "host_pruned_parent": 0.0, "host_pruned_subset": 0.0,
         }
         itemsets: dict[tuple[int, ...], int] = {}
         freq = supports >= min_count
@@ -883,6 +1019,9 @@ class HPrepostMiner:
                 parent_arr, base_idx, q_idx, slot_of, Cpad, wave_fn = self._pack_wave(
                     ranks, parents, qarr, level, slots_per_shard
                 )
+                # stop_count stays 0: per-segment supports are partial until
+                # the cross-segment reduce, so only the host bound prunes here
+                stages["planned_candidates"] += float(len(ranks))
                 token = executor.dispatch(
                     level, parent_arr, base_idx, q_idx, wave_fn is self._wave_local
                 )
@@ -918,7 +1057,13 @@ class HPrepostMiner:
                 d_ranks, d_parents, d_slot_of, d_token = dispatched
                 if surv_mask is not None:
                     kept = surv_mask[d_parents]
+                    stages["host_pruned_parent"] += float((~kept).sum())
                     d_ranks, d_slot_of = d_ranks[kept], d_slot_of[kept]
+                    if cfg.early_stop:
+                        sub = self._apriori_kept(d_ranks, surv_ranks)
+                        if sub is not None:
+                            stages["host_pruned_subset"] += float((~sub).sum())
+                            d_ranks, d_slot_of = d_ranks[sub], d_slot_of[sub]
                 pending = (d_ranks, d_slot_of, d_token)
                 ranks, parents, qarr = self._extensions(
                     d_ranks, d_slot_of, pair_packed, prefix_packed, K
@@ -927,6 +1072,11 @@ class HPrepostMiner:
                 ranks, parents, qarr = self._extensions(
                     surv_ranks, surv_slots, pair_packed, prefix_packed, K
                 )
+                if cfg.early_stop and len(ranks):
+                    sub = self._apriori_kept(ranks, surv_ranks)
+                    if sub is not None:
+                        stages["host_pruned_subset"] += float((~sub).sum())
+                        ranks, parents, qarr = ranks[sub], parents[sub], qarr[sub]
             else:
                 ranks = np.empty((0, 2), np.int32)
                 parents = np.empty(0, np.int64)

@@ -21,9 +21,12 @@ def cooccurrence_matrix(
 ) -> jnp.ndarray:
     if weights is None:
         weights = jnp.ones(rows.shape[0], jnp.int32)
-    use_pallas = backend == "pallas" or (
-        backend == "auto" and jax.default_backend() == "tpu"
-    )
+    # registry dispatch (repro.mining.tune); like item_histogram, the
+    # interpret backend stays on the exact jnp path — it targets the wave
+    # kernel, and interpreting an O(R·K^2) scan buys no coverage
+    from repro.mining.tune import resolve_backend
+
+    use_pallas = resolve_backend(backend) in ("pallas-tpu", "pallas-gpu")
     if use_pallas:
         return cooccur_pallas(rows, weights, n_items=n_items, interpret=interpret)
     return cooccur_ref(rows, weights, n_items=n_items)

@@ -1,4 +1,7 @@
-"""Public op: item_histogram — dispatches Pallas on TPU, jnp elsewhere."""
+"""Public op: item_histogram — dispatches Pallas on TPU/GPU (via the backend
+registry in ``repro.mining.tune``), jnp elsewhere. ``pallas-interpret``
+deliberately routes here to the exact jnp path: the interpreter exists to
+exercise the wave-loop intersect kernel, not the prep scans."""
 from __future__ import annotations
 
 import jax
@@ -19,9 +22,9 @@ def item_histogram(
     """Weighted count of transactions containing each item id in [0, n_bins)."""
     if weights is None:
         weights = jnp.ones(rows.shape[0], jnp.int32)
-    use_pallas = backend == "pallas" or (
-        backend == "auto" and jax.default_backend() == "tpu"
-    )
+    from repro.mining.tune import resolve_backend
+
+    use_pallas = resolve_backend(backend) in ("pallas-tpu", "pallas-gpu")
     if use_pallas and n_bins <= 65536:
         return histogram_pallas(rows, weights, n_bins=n_bins, interpret=interpret)
     if n_bins > 8192:

@@ -1,7 +1,18 @@
-"""Public op: nlist_intersect — Pallas (mask-matmul, fused support) on TPU,
-searchsorted jnp elsewhere. Both return ``(merged, supports)``: merged counts
-aligned with A's code slots plus their per-candidate row sums, so the mining
-waves never re-read the merged state just to reduce it.
+"""Public op: nlist_intersect — real backend dispatch over the registry in
+``repro.mining.tune``. Pallas (mask-matmul, fused support, optionally masked
+early-stop) on TPU/GPU or under the interpreter, searchsorted jnp elsewhere.
+Both return ``(merged, supports)``: merged counts aligned with A's code slots
+plus their per-candidate row sums, so the mining waves never re-read the
+merged state just to reduce it.
+
+Early stopping: with ``early_stop=True`` (plus ``a_cnt`` and a ``min_count``
+threshold) the Pallas path runs the masked kernel, which abandons candidates
+whose support upper bound falls below ``min_count`` mid-scan. The jnp path is
+always exact — exact supports are a superset of the masked ones above the
+threshold, so downstream thresholding is identical either way. Callers are
+responsible for only enabling the in-kernel stop when the supports it sees
+are final (single data shard, non-segmented); pass ``min_count <= 0`` to
+disable masking without retracing.
 
 fp32 exactness bound: the Pallas path accumulates counts in fp32, which is
 exact only below 2^24. Every count the kernel can produce is bounded by the
@@ -11,15 +22,25 @@ jnp path is integer-exact and has no such bound.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.nlist_intersect.kernel import nlist_intersect_pallas
+from repro.kernels.nlist_intersect.kernel import (
+    nlist_intersect_pallas,
+    nlist_intersect_pallas_es,
+)
 from repro.kernels.nlist_intersect.ref import nlist_intersect_fused_ref
 
 # values >= 2^24 are not exactly representable in fp32: the Pallas kernel
 # must never see a possible count at or above this
 FP32_EXACT_MAX = 1 << 24
+
+
+def _resolve(backend: str) -> str:
+    # repro.mining.tune owns the registry; imported lazily because the
+    # mining package sits above the kernel packages in the layer diagram
+    from repro.mining.tune import resolve_backend
+
+    return resolve_backend(backend)
 
 
 def nlist_intersect(
@@ -29,16 +50,24 @@ def nlist_intersect(
     y_post: jnp.ndarray,
     y_cnt: jnp.ndarray,
     *,
+    a_cnt: jnp.ndarray | None = None,
     backend: str = "auto",
     la_block: int = 512,
     ly_block: int = 512,
     batch_block: int = 8,
     interpret: bool = False,
+    early_stop: bool = False,
+    min_count=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    use_pallas = backend == "pallas" or (
-        backend == "auto" and jax.default_backend() == "tpu"
-    )
-    if use_pallas:
+    resolved = _resolve(backend)
+    if resolved.startswith("pallas"):
+        interpret = interpret or resolved == "pallas-interpret"
+        if early_stop and a_cnt is not None and min_count is not None:
+            return nlist_intersect_pallas_es(
+                a_pre, a_post, a_cnt, y_pre, y_post, y_cnt, min_count,
+                la_block=la_block, ly_block=ly_block, batch_block=batch_block,
+                interpret=interpret,
+            )
         return nlist_intersect_pallas(
             a_pre, a_post, y_pre, y_post, y_cnt,
             la_block=la_block, ly_block=ly_block, batch_block=batch_block,

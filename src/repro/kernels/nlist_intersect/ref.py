@@ -1,5 +1,8 @@
 """Pure-jnp oracle: batched searchsorted-based N-list intersection, plus the
-same fused ``(merged, supports)`` surface the Pallas kernel exposes."""
+same fused ``(merged, supports)`` surface the Pallas kernel exposes, and a
+tile-order model of the early-stop kernel's masked semantics."""
+import numpy as np
+
 import jax.numpy as jnp
 
 from repro.core.nlist import batched_intersect_jnp
@@ -18,3 +21,32 @@ def nlist_intersect_fused_ref(
     fp32 < 2^24 bound only constrains the Pallas path."""
     merged = nlist_intersect_ref(a_pre, a_post, y_pre, y_post, y_cnt)
     return merged, merged.sum(axis=1).astype(jnp.int32)
+
+
+def nlist_intersect_masked_ref(
+    a_pre, a_post, a_cnt, y_pre, y_post, y_cnt, min_count, *, la_block=512
+):
+    """Models ``nlist_intersect_pallas_es`` exactly: scan A-row tiles of
+    ``la_block`` slots in order; before each tile, a candidate is alive iff
+    support-so-far plus the inclusive A-count suffix mass of the remaining
+    tiles can still reach ``min_count``; dead candidates' tiles are zeroed
+    and their support frozen. Per-candidate, so ``ly_block``/``batch_block``
+    never enter the semantics. ``min_count <= 0`` reproduces the exact path.
+    """
+    exact = np.asarray(nlist_intersect_ref(a_pre, a_post, y_pre, y_post, y_cnt))
+    a_cnt = np.asarray(a_cnt)
+    B, La = exact.shape
+    lab = min(la_block, La)
+    nt = (La + lab - 1) // lab
+    mass = np.zeros((B, nt), np.float64)
+    for i in range(nt):
+        mass[:, i] = a_cnt[:, i * lab : (i + 1) * lab].sum(axis=1)
+    rem = np.cumsum(mass[:, ::-1], axis=1)[:, ::-1]  # inclusive suffix
+    merged = np.zeros_like(exact)
+    sup = np.zeros(B, np.int64)
+    for i in range(nt):
+        alive = (sup + rem[:, i]) >= min_count
+        tile = exact[:, i * lab : (i + 1) * lab] * alive[:, None]
+        merged[:, i * lab : (i + 1) * lab] = tile
+        sup += tile.sum(axis=1)
+    return jnp.asarray(merged, jnp.int32), jnp.asarray(sup, jnp.int32)

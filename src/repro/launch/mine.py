@@ -51,6 +51,27 @@ import argparse
 
 from repro.data import corpus, synth
 from repro.mining import MineSpec, MiningEngine, list_miners
+from repro.mining.tune import registered_backends
+
+
+def _report_plans(engine, expect: str | None) -> None:
+    """Print the engine tuner's counters; with ``--expect-plans`` enforce
+    the cold (searched this process) / warm (served entirely from
+    kernel_plans.json, zero trials) contract — the tune-smoke CI check."""
+    st = engine.tuner.stats
+    print(
+        f"tuner: trials={st['trials']} tuned={st['tuned']} "
+        f"plan_hits={st['plan_hits']} loaded_plans={st['loaded_plans']}"
+    )
+    if expect == "cold" and (st["trials"] == 0 or st["tuned"] == 0):
+        raise SystemExit(f"expected a cold tune (timed trials > 0) but tuner stats = {st}")
+    if expect == "warm" and (
+        st["trials"] != 0 or st["loaded_plans"] == 0 or st["plan_hits"] == 0
+    ):
+        raise SystemExit(
+            f"expected warm plans (zero trials, served from kernel_plans.json) "
+            f"but tuner stats = {st}"
+        )
 
 
 def _serve(args, rows, n_items: int, name: str, spec: MineSpec, mesh):
@@ -111,6 +132,8 @@ def _serve(args, rows, n_items: int, name: str, spec: MineSpec, mesh):
                     f"(snapshot store: {info.get('snapshot_store')})"
                 )
             print("warm start verified: zero prep stages, served from snapshots")
+        if args.tune or args.expect_plans:
+            _report_plans(engine, args.expect_plans)
     return results
 
 
@@ -174,6 +197,8 @@ def _append_distributed(args, rows, n_items: int, name: str, spec: MineSpec, mes
                 "recovery verified: bit-identical sweep after worker death"
                 + (", segments restored from snapshots only" if args.snapshot_dir else "")
             )
+        if args.tune or args.expect_plans:
+            _report_plans(engine, args.expect_plans)
         return results
     finally:
         dm.close()
@@ -219,6 +244,8 @@ def _append(args, rows, n_items: int, name: str, spec: MineSpec, mesh):
                 f"(appends={args.append}, snapshot_misses={s['seg_snapshot_misses']})"
             )
         print("warm start verified: all segments restored from snapshots")
+    if args.tune or args.expect_plans:
+        _report_plans(engine, args.expect_plans)
     return results
 
 
@@ -271,7 +298,33 @@ def main(argv=None):
              "re-mine, and fail unless the answers are bit-identical (and, "
              "with --snapshot-dir, recovered without rebuilding a segment)",
     )
+    ap.add_argument(
+        "--backend", default="auto", choices=registered_backends(),
+        help="kernel backend for the hprepost wave loop (auto resolves to "
+             "Pallas on TPU/GPU, jnp elsewhere; pallas falls back to the "
+             "interpreter off-accelerator)",
+    )
+    ap.add_argument(
+        "--no-early-stop", action="store_true",
+        help="disable early-stopping intersections (host Apriori-closure "
+             "pruning + in-kernel bound masking) and run the exact legacy "
+             "path bit-for-bit",
+    )
+    ap.add_argument(
+        "--tune", action="store_true",
+        help="resolve kernel block knobs through the persisted autotuner "
+             "(kernel_plans.json next to --snapshot-dir) instead of the "
+             "static la/ly/batch-block defaults",
+    )
+    ap.add_argument(
+        "--expect-plans", default=None, choices=["cold", "warm"],
+        help="with --tune: fail unless the tuner ran a timed search this "
+             "process (cold) or served every plan from kernel_plans.json "
+             "with zero trials (warm) — the tune-smoke CI check",
+    )
     args = ap.parse_args(argv)
+    if args.expect_plans and not args.tune:
+        ap.error("--expect-plans needs --tune")
     if args.append and args.serve:
         ap.error("--append and --serve are separate paths; pick one")
     if args.workers and not args.append:
@@ -292,7 +345,9 @@ def main(argv=None):
 
     mesh = make_mesh_from_spec(args.mesh)
     spec = MineSpec(
-        algorithm=args.algo, min_sup=args.min_sup, max_k=args.max_k, patterns=args.patterns
+        algorithm=args.algo, min_sup=args.min_sup, max_k=args.max_k,
+        patterns=args.patterns, backend=args.backend,
+        early_stop=not args.no_early_stop, tune=args.tune,
     )
     if args.serve:
         return _serve(args, rows, n_items, name, spec, mesh)
@@ -311,11 +366,15 @@ def main(argv=None):
         for frac, res in zip(fracs, results):
             tag = " [shared prep]" if res.prep_shared else ""
             print(f"  min_sup={frac:g} -> {res.summary()}{tag}")
+        if args.tune or args.expect_plans:
+            _report_plans(engine, args.expect_plans)
         return results
     res = engine.submit(rows, n_items, spec)
     print(f"{name}: {len(rows)} tx, min_count={res.min_count} -> {res.summary()}")
     for items, sup in res.top(args.top):
         print(f"  {items}: {sup}")
+    if args.tune or args.expect_plans:
+        _report_plans(engine, args.expect_plans)
     return res
 
 

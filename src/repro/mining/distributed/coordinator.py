@@ -107,11 +107,17 @@ class RemoteSegmentExecutor:
         for w, seq in seqs:
             c._expect(w, seq)
 
-    def dispatch(self, level, parent_arr, base_idx, q_idx, use_local):
+    def dispatch(self, level, parent_arr, base_idx, q_idx, use_local,
+                 stop_count=0):
+        # stop_count rides along for contract parity with
+        # LocalSegmentExecutor; the planner always passes 0 for segmented
+        # mining (per-worker supports are partial until the cross-machine
+        # reduce, so an in-kernel stop would be unsound)
         c = self.coord
         msg = {
             "op": pr.OP_WAVE, "level": int(level), "parent_arr": parent_arr,
             "base_idx": base_idx, "q_idx": q_idx, "use_local": bool(use_local),
+            "stop_count": int(stop_count),
         }
         c._miner.stage_counters["waves"] += 1
         c._miner.stage_counters["seg_waves"] = (
@@ -451,7 +457,10 @@ class DistributedMiner:
             raise ValueError(
                 f"distributed queries run on the hprepost backend, got {spec.algorithm!r}"
             )
-        if self._fe._device_config(spec) != self._device_cfg:
+        # only prep-level knobs are pinned by the packed segments;
+        # execution-only knobs (blocks, backend, early_stop, tune) are free
+        # to differ per query and are honored via the query's own miner
+        if self._fe._prep_config(spec) != self._device_cfg.prep_key():
             raise ValueError(
                 "query device config differs from the database's; segments were "
                 "packed under the creation spec — open a new database to change knobs"
@@ -477,7 +486,8 @@ class DistributedMiner:
                 f"|stream F-list|={len(items)} exceeds max_f1={spec.max_f1}"
             )
         executor = RemoteSegmentExecutor(self, items)
-        res = self._miner.mine_prepared_segments(
+        qminer = self._fe.miner_for(spec)  # honors execution-only knobs
+        res = qminer.mine_prepared_segments(
             None, items, sups, C, min_count, max_k=spec.max_k,
             peak_base=sum(m.prep_bytes for m in self._segments.values()),
             executor=executor,
@@ -486,7 +496,7 @@ class DistributedMiner:
         self.stats["queries"] += 1
         out = self._fe._finish(
             res.itemsets, res.total_count, res.n_explicit, res.peak_bytes,
-            dict(self._miner.last_stage_times), res.flist_items,
+            dict(qminer.last_stage_times), res.flist_items,
             spec=spec, min_count=min_count, n_rows=n_rows, t0=t0, prep_shared=True,
         )
         out.service_stats.update(

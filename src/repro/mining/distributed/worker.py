@@ -119,7 +119,7 @@ class Worker:
             raise RuntimeError("wave before query_begin")
         token = ex.dispatch(
             int(msg["level"]), msg["parent_arr"], msg["base_idx"], msg["q_idx"],
-            bool(msg["use_local"]),
+            bool(msg["use_local"]), int(msg.get("stop_count", 0)),
         )
         sups = ex.collect(token)
         self.stats["waves"] += 1

@@ -21,7 +21,9 @@ request. Host miners keep the one-shot path.
 
 Persistent PreparedDB cache: the engine keeps an LRU of device-resident
 ``PreparedDB`` s keyed exactly like planned groups — (database
-fingerprint, n_items, device config) — under a configurable byte budget
+fingerprint, n_items, prep-level config; execution-only knobs like kernel
+blocks, backend, and early-stop are normalized away) — under a
+configurable byte budget
 (``prep_cache_bytes``, accounted with ``PreparedDB.prep_bytes``). A cached
 entry serves any request whose resolved threshold is at least the entry's
 floor; looser thresholds (or a k>1 request hitting an F1-only entry)
@@ -102,7 +104,7 @@ class MiningEngine:
             "prepares": 0,
             "prepared_mines": 0,  # requests served from a shared PreparedDB
         }
-        # persistent PreparedDB cache: (fingerprint, n_items, device config)
+        # persistent PreparedDB cache: (fingerprint, n_items, prep config)
         # -> (miner, PreparedDB), LRU under a per-shard byte budget;
         # prep_cache_bytes <= 0 disables caching entirely
         self.prep_cache_bytes = int(prep_cache_bytes)
@@ -115,6 +117,17 @@ class MiningEngine:
         if snapshot_store is None and snapshot_dir is not None:
             snapshot_store = SnapshotStore(snapshot_dir, byte_budget=snapshot_bytes)
         self.snapshot_store = snapshot_store
+        # one kernel-plan autotuner per engine, persisted next to the
+        # snapshot store (kernel_plans.json) so a warm process reruns its
+        # best block configs with zero search trials; attached to every
+        # hprepost frontend the engine builds. Plans only resolve through
+        # it when a spec opts in (``tune=True``).
+        plan_dir = snapshot_dir
+        if plan_dir is None and snapshot_store is not None:
+            plan_dir = getattr(snapshot_store, "dir", None)
+        from repro.mining.tune import KernelTuner
+
+        self.tuner = KernelTuner(plan_dir=plan_dir)
         # engine-lifetime fingerprint memo: id(array) -> (weakref, fp,
         # frozen, sample); compacted (dead weakrefs dropped) when it
         # reaches _fp_sweep_at, which doubles past the live count so
@@ -141,6 +154,8 @@ class MiningEngine:
                 fe = get_miner(
                     algorithm, mesh=self.mesh, data_axis=self.data_axis, model_axis=self.model_axis
                 )
+                if hasattr(fe, "tuner"):
+                    fe.tuner = self.tuner
                 self._frontends[algorithm] = fe
                 self.stats["frontends_built"] += 1
             return fe
@@ -309,8 +324,11 @@ class MiningEngine:
             self._prep_cache.clear()
 
     def _cache_key(self, rows, n_items: int, spec: MineSpec) -> tuple:
+        # keyed on the *prep* config — execution-only knobs (blocks,
+        # backend, early_stop, tune) are normalized away, so a retune or
+        # backend switch keeps hitting warm PreparedDBs and snapshots
         fe = self.frontend("hprepost")
-        return (spec.algorithm, self._fingerprint(rows), n_items, fe._device_config(spec))
+        return (spec.algorithm, self._fingerprint(rows), n_items, fe._prep_config(spec))
 
     def _store_key(self, key: tuple, miner) -> str:
         """The on-disk identity of ``key``: the LRU key plus the data-shard
@@ -419,8 +437,11 @@ class MiningEngine:
         if ent is not None:
             with self._lock:
                 self.stats["prepared_mines"] += 1
-            miner, prepared = ent
-            res = fe.mine_prepared(miner, prepared, spec, prep_shared=True)
+            _, prepared = ent
+            # mine with the *current* spec's miner, not the one that built
+            # the entry: cache keys span execution configs now, and the
+            # PreparedDB layout only depends on the mesh (shared engine-wide)
+            res = fe.mine_prepared(fe.miner_for(spec), prepared, spec, prep_shared=True)
             res.service_stats["prep_source"] = source
             return res
         t0 = time.perf_counter()
@@ -516,9 +537,10 @@ class MiningEngine:
         """Group key for shared-prep planning, or None for the one-shot path.
 
         Only the distributed hprepost backend has a prepare/mine split; a
-        group must agree on the database and on every device-level knob
-        (the per-call threshold / max_k / patterns are free to differ). The
-        key doubles as the persistent PreparedDB cache key."""
+        group must agree on the database and on every prep-level knob
+        (the per-call threshold / max_k / patterns — and the execution-only
+        kernel knobs — are free to differ). The key doubles as the
+        persistent PreparedDB cache key."""
         if req.spec.algorithm != "hprepost":
             return None
         return self._cache_key(req.rows, req.n_items, req.spec)
@@ -564,7 +586,7 @@ class MiningEngine:
         waves: when the acquire ran ahead on a prep thread, the idle gap
         between prepare finishing and the group being served is scheduling
         delay, not work, and must not inflate ``wall_time_s``."""
-        miner, prepared, source, prep_s = acq
+        _, prepared, source, prep_s = acq
         fe = self.frontend("hprepost")
         out = []
         for j, r in enumerate(reqs):
@@ -573,7 +595,7 @@ class MiningEngine:
                 self.stats["prepared_mines"] += 1
             payer = source == "built" and j == 0
             res = fe.mine_prepared(
-                miner, prepared, r.spec,
+                fe.miner_for(r.spec), prepared, r.spec,
                 prep_stages=prepared.stage_times if payer else None,
                 prep_shared=not payer,
                 t0=time.perf_counter() - prep_s if payer else None,

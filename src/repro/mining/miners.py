@@ -189,6 +189,9 @@ class HPrepostFrontend(_MinerBase):
         # (and one set of jitted programs) per device config
         self._miners_lock = threading.Lock()
         self.miners_built = 0
+        # the owning engine attaches its KernelTuner here; miners built by
+        # this frontend resolve tuned plans through it (cfg.tune permitting)
+        self.tuner = None
 
     def _device_config(self, spec: MineSpec):
         from repro.core.hprepost import HPrepostConfig
@@ -205,7 +208,16 @@ class HPrepostFrontend(_MinerBase):
             backend=spec.backend,
             max_f1=spec.max_f1,
             max_itemsets=spec.max_itemsets,
+            early_stop=spec.early_stop,
+            tune=spec.tune,
         )
+
+    def _prep_config(self, spec: MineSpec):
+        """The config subset ``prepare`` actually depends on — what prep
+        caches and snapshots key on. Execution-only knobs (blocks, backend,
+        early_stop, tune) are normalized away: a retune or backend switch
+        must keep serving warm preps."""
+        return self._device_config(spec).prep_key()
 
     def miner_for(self, spec: MineSpec):
         from repro.core.hprepost import HPrepostMiner
@@ -218,6 +230,7 @@ class HPrepostFrontend(_MinerBase):
                     self.mesh, data_axis=self.data_axis, model_axis=self.model_axis, config=cfg
                 )
                 self.miners_built += 1
+            miner.tuner = self.tuner
         return miner
 
     def _run(self, rows, n_items, min_count, spec):

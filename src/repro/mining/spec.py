@@ -32,7 +32,8 @@ class MineSpec:
     max_k: int | None = None  # cap on itemset size (None = unbounded)
     patterns: str = "all"
     rank_k: int = 10
-    backend: str = "auto"  # kernel dispatch: auto | pallas | jnp
+    backend: str = "auto"  # a repro.mining.tune registry name; validated in
+    # resolve() against registered_backends()
     candidate_unit: int = 256  # hprepost: candidate buffers, pow2 multiples
     nlist_width: int | None = None  # hprepost: static N-list width (None = auto)
     la_block: int = 512  # hprepost intersect kernel: A-codes per tile
@@ -41,6 +42,11 @@ class MineSpec:
     partition_candidates: bool = True  # hprepost mode B (PFP groups)
     max_f1: int = 4096  # guard on |F-list|
     max_itemsets: int = 2_000_000
+    early_stop: bool = True  # hprepost: early-stopping intersections (host
+    # Apriori-closure pruning + in-kernel bound masking where sound); False
+    # runs the exact legacy path bit-for-bit
+    tune: bool = False  # hprepost: resolve block knobs via the persisted
+    # KernelTuner instead of the static la/ly/batch_block fields
 
     def __post_init__(self):
         if self.min_sup is not None and self.min_count is not None:
@@ -67,7 +73,19 @@ class MineSpec:
         would admit itemsets *below* the requested fraction (min_sup=0.25
         over 10 rows must demand count 3, not 2). The 1e-9 slack keeps exact
         fractions exact under float noise (``3/7 * 7`` is 3.0000000000000004
-        and must resolve to 3, not 4)."""
+        and must resolve to 3, not 4).
+
+        Also the choke point every execution path funnels through before
+        any device work, so the backend name is validated here: unknown
+        names fail with the registered list instead of silently running
+        whatever the old string switch fell through to."""
+        from repro.mining.tune import registered_backends
+
+        if self.backend not in registered_backends():
+            raise ValueError(
+                f"unknown backend {self.backend!r}; registered backends: "
+                f"{', '.join(registered_backends())}"
+            )
         if self.min_count is not None:
             return int(self.min_count)
         if self.min_sup is None:

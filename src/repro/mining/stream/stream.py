@@ -51,9 +51,12 @@ def segment_key(digest: tuple, local_items: np.ndarray, n_items: int,
                 device_cfg, n_shards: int) -> str:
     """On-disk identity of a segment build: the batch content, the imposed
     item order (the same rows appended into a different stream history pack
-    differently!), the device config, and the shard count. Shared by the
-    streaming miner and the distributed workers — agreeing on this key is
-    what lets a surviving worker warm-restore a dead peer's segments."""
+    differently!), the prep-level device config, and the shard count.
+    Execution-only knobs (kernel blocks, backend, early_stop, tune) are
+    normalized away via ``prep_key`` — a retune or backend switch must keep
+    warm-restoring segments. Shared by the streaming miner and the
+    distributed workers — agreeing on this key is what lets a surviving
+    worker warm-restore a dead peer's segments."""
     from repro.mining.service.store import SnapshotStore
 
     items_digest = hashlib.sha1(
@@ -61,7 +64,8 @@ def segment_key(digest: tuple, local_items: np.ndarray, n_items: int,
     ).hexdigest()
     return SnapshotStore.key_for(
         "hprepost-seg", digest, n_items,
-        {"cfg": dataclasses.asdict(device_cfg), "stream_items": items_digest},
+        {"cfg": dataclasses.asdict(device_cfg.prep_key()),
+         "stream_items": items_digest},
         n_shards,
     )
 
@@ -230,7 +234,10 @@ class StreamingMiner:
             raise ValueError(
                 f"stream queries run on the hprepost backend, got {spec.algorithm!r}"
             )
-        if self._fe._device_config(spec) != self._device_cfg:
+        # only prep-level knobs are pinned by the packed segments;
+        # execution-only knobs (blocks, backend, early_stop, tune) are free
+        # to differ per query and are honored via the query's own miner
+        if self._fe._prep_config(spec) != self._device_cfg.prep_key():
             raise ValueError(
                 "query device config differs from the stream's; segments were "
                 "packed under the stream spec — open a new stream to change knobs"
@@ -256,13 +263,14 @@ class StreamingMiner:
             raise ValueError(
                 f"|stream F-list|={len(items)} exceeds max_f1={spec.max_f1}"
             )
-        res = self.miner.mine_prepared_segments(
+        qminer = self._fe.miner_for(spec)  # honors execution-only knobs
+        res = qminer.mine_prepared_segments(
             handles, items, sups, C, min_count, max_k=spec.max_k, peak_base=peak_base
         )
         self.stats["queries"] += 1
         out = self._fe._finish(
             res.itemsets, res.total_count, res.n_explicit, res.peak_bytes,
-            dict(self.miner.last_stage_times), res.flist_items,
+            dict(qminer.last_stage_times), res.flist_items,
             spec=spec, min_count=min_count, n_rows=n_rows, t0=t0, prep_shared=True,
         )
         out.service_stats.update(

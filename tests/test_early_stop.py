@@ -1,0 +1,265 @@
+"""Early-stopping intersections (PR 7): masked-kernel semantics vs the ref
+model, exact-path bit-identity when disabled, and end-to-end answer parity
+— single-process, pallas-interpret, streamed (PAD-heavy segments), and
+distributed — against the legacy exact path and the brute-force oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import encoding as enc
+from repro.core.nlist import INF
+from repro.core.oracle import mine_bruteforce
+from repro.core.ppc import build_ppc
+from repro.data.synth import random_db
+from repro.kernels.nlist_intersect.kernel import (
+    nlist_intersect_pallas,
+    nlist_intersect_pallas_es,
+)
+from repro.kernels.nlist_intersect.ops import nlist_intersect
+from repro.kernels.nlist_intersect.ref import (
+    nlist_intersect_masked_ref,
+    nlist_intersect_ref,
+)
+from repro.mining import MineSpec, MiningEngine
+from repro.mining.stream import StreamSpec
+
+SPEC = MineSpec(algorithm="hprepost", max_k=None, candidate_unit=8, min_sup=0.3)
+
+
+def _nlist_batch_cnt(rng, B, La, Ly):
+    """Tree-valid PP-code batches (as tests/test_kernels.py) plus A's node
+    counts — the early-stop kernel's bound masses."""
+    a_pre = np.full((B, La), INF, np.int32)
+    a_post = np.full((B, La), -1, np.int32)
+    a_cnt = np.zeros((B, La), np.int32)
+    y_pre = np.full((B, Ly), INF, np.int32)
+    y_post = np.full((B, Ly), -1, np.int32)
+    y_cnt = np.zeros((B, Ly), np.int32)
+    for b in range(B):
+        n_items = int(rng.integers(2, 16))
+        rows = random_db(rng, int(rng.integers(5, 120)), n_items, min(8, n_items))
+        fl = enc.build_flist(enc.item_support(rows, n_items), 1)
+        if fl.k < 2:
+            continue
+        urows, w = enc.dedup_rows(enc.rank_encode(rows, fl))
+        if not len(urows):
+            continue
+        nls = build_ppc(urows, w).nlists(fl.k)
+        qa, qy = sorted(rng.choice(fl.k, size=2, replace=False))
+        A, Y = nls[qa][:La], nls[qy][:Ly]
+        a_pre[b, : len(A)], a_post[b, : len(A)] = A[:, 0], A[:, 1]
+        a_cnt[b, : len(A)] = A[:, 2]
+        y_pre[b, : len(Y)], y_post[b, : len(Y)] = Y[:, 0], Y[:, 1]
+        y_cnt[b, : len(Y)] = Y[:, 2]
+    return map(jnp.asarray, (a_pre, a_post, a_cnt, y_pre, y_post, y_cnt))
+
+
+# ------------------------------------------------------------ kernel layer
+@pytest.mark.parametrize("min_count", [0, 1, 3, 10, 10_000])
+@pytest.mark.parametrize("B,La,Ly", [(3, 8, 5), (5, 40, 70), (2, 130, 257)])
+def test_masked_kernel_matches_masked_ref(B, La, Ly, min_count):
+    """The interpreted early-stop kernel is bit-identical to its tile-order
+    ref model, masked supports never exceed exact ones, and any candidate
+    whose exact support reaches the threshold is returned exactly."""
+    rng = np.random.default_rng(B * La + Ly + min_count)
+    a_pre, a_post, a_cnt, y_pre, y_post, y_cnt = _nlist_batch_cnt(rng, B, La, Ly)
+    got, sup = nlist_intersect_pallas_es(
+        a_pre, a_post, a_cnt, y_pre, y_post, y_cnt, min_count,
+        la_block=64, ly_block=64, batch_block=3, interpret=True,
+    )
+    want, wsup = nlist_intersect_masked_ref(
+        a_pre, a_post, a_cnt, y_pre, y_post, y_cnt, min_count, la_block=64
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(sup), np.asarray(wsup))
+
+    exact = np.asarray(nlist_intersect_ref(a_pre, a_post, y_pre, y_post, y_cnt))
+    esup = exact.sum(axis=1)
+    assert (np.asarray(sup) <= esup).all()
+    reached = esup >= min_count
+    np.testing.assert_array_equal(np.asarray(sup)[reached], esup[reached])
+    np.testing.assert_array_equal(np.asarray(got)[reached], exact[reached])
+    # a masked-out candidate's partial support stays below the threshold —
+    # downstream thresholding cannot be confused by it
+    assert (np.asarray(sup)[~reached] < max(min_count, 1)).all()
+
+
+def test_stop_zero_is_bit_identical_to_exact_kernel():
+    rng = np.random.default_rng(11)
+    a_pre, a_post, a_cnt, y_pre, y_post, y_cnt = _nlist_batch_cnt(rng, 5, 40, 33)
+    got, sup = nlist_intersect_pallas_es(
+        a_pre, a_post, a_cnt, y_pre, y_post, y_cnt, 0,
+        la_block=16, ly_block=16, batch_block=2, interpret=True,
+    )
+    want, wsup = nlist_intersect_pallas(
+        a_pre, a_post, y_pre, y_post, y_cnt,
+        la_block=16, ly_block=16, batch_block=2, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(sup), np.asarray(wsup))
+
+
+def test_op_dispatch_early_stop_vs_exact():
+    """The op routes early_stop+min_count to the masked kernel and keeps
+    the exact path (jnp, or early_stop=False) byte-stable."""
+    rng = np.random.default_rng(5)
+    a_pre, a_post, a_cnt, y_pre, y_post, y_cnt = _nlist_batch_cnt(rng, 4, 24, 24)
+    exact, esup = nlist_intersect(a_pre, a_post, y_pre, y_post, y_cnt, backend="jnp")
+    # early_stop on the exact-threshold-0 path: identical
+    m0, s0 = nlist_intersect(
+        a_pre, a_post, y_pre, y_post, y_cnt, a_cnt=a_cnt,
+        backend="pallas-interpret", la_block=16, ly_block=16, batch_block=2,
+        early_stop=True, min_count=0,
+    )
+    np.testing.assert_array_equal(np.asarray(m0), np.asarray(exact))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(esup))
+    # a real threshold: reached candidates exact, doomed ones below it
+    mc = 4
+    _, s4 = nlist_intersect(
+        a_pre, a_post, y_pre, y_post, y_cnt, a_cnt=a_cnt,
+        backend="pallas-interpret", la_block=16, ly_block=16, batch_block=2,
+        early_stop=True, min_count=mc,
+    )
+    es = np.asarray(esup)
+    got = np.asarray(s4)
+    np.testing.assert_array_equal(got[es >= mc], es[es >= mc])
+    assert (got[es < mc] < mc).all()
+    # early_stop=False ignores a_cnt/min_count entirely
+    mf, sf = nlist_intersect(
+        a_pre, a_post, y_pre, y_post, y_cnt, a_cnt=a_cnt,
+        backend="pallas-interpret", la_block=16, ly_block=16, batch_block=2,
+        early_stop=False, min_count=mc,
+    )
+    np.testing.assert_array_equal(np.asarray(mf), np.asarray(exact))
+
+
+# ------------------------------------------------------------- end to end
+@pytest.mark.parametrize("min_sup", [1 / 7, 2 / 7, 3 / 7, 0.5, 5 / 7])
+def test_paper_db_parity_across_thresholds(paper_db, min_sup):
+    """Early-stopped answers are bit-identical to the exact legacy path and
+    the oracle on the paper's Table 1 database — including the fractional
+    thresholds that sit exactly on a support boundary."""
+    rows, n_items = paper_db
+    eng = MiningEngine()
+    spec = SPEC.with_(min_sup=min_sup)
+    on = eng.submit(rows, n_items, spec)
+    off = eng.submit(rows, n_items, spec.with_(early_stop=False))
+    oracle = mine_bruteforce(rows, n_items, spec.resolve(len(rows)))
+    assert on.itemsets == oracle
+    assert off.itemsets == oracle
+    assert on.total_count == off.total_count == len(oracle)
+
+
+def test_dense_db_parity_and_pruning_counters():
+    rng = np.random.default_rng(21)
+    n_items = 12
+    rows = random_db(rng, 90, n_items, 9)
+    eng = MiningEngine()
+    spec = SPEC.with_(min_sup=0.12)
+    on = eng.submit(rows, n_items, spec)
+    off = eng.submit(rows, n_items, spec.with_(early_stop=False))
+    assert on.itemsets == off.itemsets == mine_bruteforce(
+        rows, n_items, spec.resolve(len(rows)))
+    st_on, st_off = on.stage_times_s, off.stage_times_s
+    for key in ("planned_candidates", "host_pruned_parent", "host_pruned_subset"):
+        assert key in st_on and key in st_off
+    # the Apriori-closure subset prune only runs with early_stop on
+    assert st_off["host_pruned_subset"] == 0.0
+    # pruning shipped strictly fewer candidates to the device
+    assert st_on["planned_candidates"] <= st_off["planned_candidates"]
+
+
+def test_pallas_interpret_backend_end_to_end(paper_db):
+    """The masked Pallas kernel runs the whole mine under backend='pallas'
+    (interpreter on CPU) and answers bit-identically to jnp and the
+    oracle."""
+    rows, n_items = paper_db
+    eng = MiningEngine()
+    spec = SPEC.with_(min_sup=2 / 7, backend="pallas", la_block=16,
+                      ly_block=16, batch_block=2)
+    res = eng.submit(rows, n_items, spec)
+    oracle = mine_bruteforce(rows, n_items, spec.resolve(len(rows)))
+    assert res.itemsets == oracle
+    assert eng.submit(
+        rows, n_items, spec.with_(backend="jnp")).itemsets == oracle
+
+
+# ---------------------------------------------------- streamed / distributed
+def _pad_heavy_batches(seed=2, n_items=11, width=16):
+    """Batches whose rows are mostly PAD (lengths 1-4 in width-16 rows) —
+    the masked kernel and the bound masses must shrug off sentinel slots."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for n in (23, 9, 31):
+        rows = np.full((n, width), -1, np.int32)
+        for r in range(n):
+            k = int(rng.integers(1, 5))
+            rows[r, :k] = np.sort(rng.choice(n_items, size=k, replace=False))
+        out.append(rows)
+    return out, n_items
+
+
+@pytest.mark.parametrize("min_sup", [0.08, 3 / 63])
+def test_streamed_segments_parity_pad_heavy(min_sup):
+    batches, n_items = _pad_heavy_batches()
+    spec = SPEC.with_(min_sup=min_sup)
+    results = {}
+    for es in (True, False):
+        eng = MiningEngine()
+        for b in batches:
+            eng.append(b, n_items, spec=spec.with_(early_stop=es),
+                       stream_spec=StreamSpec(row_pad=8))
+        results[es] = eng.submit_stream(spec.with_(early_stop=es))
+    all_rows = np.concatenate(batches, axis=0)
+    oracle = mine_bruteforce(all_rows, n_items, spec.resolve(len(all_rows)))
+    assert results[True].itemsets == oracle
+    assert results[False].itemsets == oracle
+
+
+def test_stream_query_execution_knobs_may_differ():
+    """A stream packed with early_stop on serves early_stop-off queries
+    (and block/backend changes) — only prep-level knobs are pinned."""
+    batches, n_items = _pad_heavy_batches(seed=4)
+    eng = MiningEngine()
+    for b in batches:
+        eng.append(b, n_items, spec=SPEC.with_(min_sup=0.1),
+                   stream_spec=StreamSpec(row_pad=8))
+    on = eng.submit_stream(SPEC.with_(min_sup=0.1))
+    off = eng.submit_stream(
+        SPEC.with_(min_sup=0.1, early_stop=False, la_block=64, backend="jnp"))
+    assert on.itemsets == off.itemsets
+    # prep-level knobs stay pinned
+    with pytest.raises(ValueError, match="device config"):
+        eng.submit_stream(SPEC.with_(min_sup=0.1, candidate_unit=16))
+
+
+def test_distributed_parity_early_stop(tmp_path):
+    """RemoteSegmentExecutor path: a 2-worker distributed mine with early
+    stopping answers bit-identically to the exact path and the
+    single-process miner."""
+    rng = np.random.default_rng(9)
+    n_items = 10
+    batches = [random_db(rng, n, n_items, 6) for n in (24, 17, 21)]
+    sspec = StreamSpec(row_pad=16)
+    spec = SPEC.with_(min_sup=0.25, max_k=4)
+
+    single = MiningEngine()
+    for b in batches:
+        single.append(b, n_items, spec=spec, stream_spec=sspec)
+    want = single.submit_stream(spec)
+
+    eng = MiningEngine(snapshot_dir=str(tmp_path))
+    dm = eng.distribute(name="es", n_items=n_items, workers=2, spec=spec,
+                        stream_spec=sspec)
+    try:
+        for b in batches:
+            dm.append(b)
+        on = dm.mine(spec)
+        off = dm.mine(spec.with_(early_stop=False))
+    finally:
+        dm.close()
+    all_rows = np.concatenate(batches, axis=0)
+    oracle = mine_bruteforce(all_rows, n_items, spec.resolve(len(all_rows)))
+    assert on.itemsets == oracle
+    assert off.itemsets == oracle
+    assert want.itemsets == oracle

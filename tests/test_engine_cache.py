@@ -167,6 +167,47 @@ def test_different_device_config_is_a_different_entry():
     assert info["entries"] == 2 and info["misses"] == 2 and info["hits"] == 0
 
 
+def test_execution_only_knobs_share_one_entry():
+    """PR 7: kernel blocks / backend / early_stop / tune are execution-only
+    knobs — a retune or backend switch must keep hitting the warm
+    PreparedDB (same LRU entry), never re-run prep, and answer
+    bit-identically."""
+    rows, n_items = _db(18)
+    eng = MiningEngine()
+    base = eng.submit(rows, n_items, SPEC)
+    variants = (
+        SPEC.with_(la_block=128, ly_block=128, batch_block=4),
+        SPEC.with_(backend="jnp"),
+        SPEC.with_(early_stop=False),
+        SPEC.with_(tune=True),
+    )
+    for spec in variants:
+        res = eng.submit(rows, n_items, spec)
+        assert res.prep_shared, spec
+        assert res.itemsets == base.itemsets, spec
+    info = eng.cache_info()
+    assert info["entries"] == 1 and info["misses"] == 1
+    assert info["hits"] == len(variants)
+    assert _counters(eng)["job1"] == 1  # prep ran exactly once
+
+
+def test_snapshot_warm_across_execution_config_change(tmp_path):
+    """PR 7: snapshot keys are block-independent too — a cold process with
+    different execution knobs must warm-start from the other process's
+    spilled PreparedDB."""
+    rows, n_items = _db(19)
+    MiningEngine(snapshot_dir=str(tmp_path)).submit(rows, n_items, SPEC)
+    eng2 = MiningEngine(snapshot_dir=str(tmp_path))
+    res = eng2.submit(
+        rows, n_items,
+        SPEC.with_(la_block=128, batch_block=4, backend="jnp", early_stop=False),
+    )
+    assert res.service_stats["prep_source"] == "snapshot"
+    info = eng2.cache_info()
+    assert info["snapshot_hits"] == 1 and info["snapshot_misses"] == 0
+    assert _counters(eng2)["job1"] == 0  # zero prep stages in this process
+
+
 # ---------------------------------------------- fingerprint memoization
 def test_fingerprint_memoized_per_array_identity(monkeypatch):
     rows, n_items = _db(12)
