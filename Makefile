@@ -25,6 +25,13 @@
 #                       sweep, hard-kill one worker, re-mine — fails unless
 #                       the answers are bit-identical and the re-assigned
 #                       segments restored from snapshots without a rebuild
+#   make chaos-smoke  - hardened-service soak: a fixed-seed ChaosInjector over
+#                       every service failure point (enqueue/prep/serve/wave/
+#                       snapshot read) plus an overload flood against a tiny
+#                       admission queue — fails unless every accepted Future
+#                       resolves (result or typed error), successes are
+#                       bit-identical to a clean run, and backpressure is
+#                       immediate typed Overloaded
 #   make tune-smoke   - kernel autotuner end-to-end: a cold process runs the
 #                       timed block search and persists kernel_plans.json
 #                       next to the snapshot dir; a second process must serve
@@ -41,7 +48,7 @@ STREAM_SNAP := .stream-smoke-snapshots
 DIST_SNAP := .dist-smoke-snapshots
 TUNE_SNAP := .tune-smoke-snapshots
 
-.PHONY: test test-tier1 bench-smoke bench-json bench-gate mine-smoke serve-smoke stream-smoke dist-smoke tune-smoke
+.PHONY: test test-tier1 bench-smoke bench-json bench-gate mine-smoke serve-smoke stream-smoke dist-smoke tune-smoke chaos-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -91,6 +98,9 @@ tune-smoke:
 	$(PY) -m repro.launch.mine --tune --snapshot-dir $(TUNE_SNAP) \
 		--dataset mushroom --scale 0.05 --min-sup 0.3 --max-k 4 --expect-plans warm
 	rm -rf $(TUNE_SNAP)
+
+chaos-smoke:
+	$(PY) -m benchmarks.chaos_soak
 
 bench-gate:
 	$(PY) -m benchmarks.bench_gate

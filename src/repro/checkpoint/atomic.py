@@ -48,6 +48,27 @@ def save_array(path: str, arr: np.ndarray) -> None:
         os.fsync(f.fileno())
 
 
+def replace_file_atomic(path: str, data: bytes) -> None:
+    """Atomically replace the single file ``path`` with ``data``.
+
+    The file-granularity sibling of ``write_dir_atomic``: write + fsync a
+    unique tmp next to the target, then ``os.replace`` (atomic within a
+    filesystem) — a reader at ``path`` sees the old bytes or the new
+    bytes, never a prefix. Used for manifests that index directory
+    entries (e.g. the coordinator's append-log manifest), where a torn
+    write would orphan or duplicate entries on replay."""
+    tmp = f"{path}{TMP_SUFFIX}{os.getpid()}-{uuid.uuid4().hex[:8]}"
+    try:
+        fsync_write(tmp, data)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def write_dir_atomic(final: str, writer: Callable[[str], None]) -> None:
     """Populate directory ``final`` atomically.
 

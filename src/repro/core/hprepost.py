@@ -39,6 +39,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import encoding as enc
+from repro.fault import failures
 from repro.core.ppc import build_ppc_jnp
 from repro.core.prepost import PrepostResult
 from repro.kernels.cooccur.ops import cooccurrence_matrix
@@ -291,6 +292,7 @@ class LocalSegmentExecutor:
     def dispatch(self, level, parent_arr, base_idx, q_idx, use_local,
                  stop_count=0):
         m = self.miner
+        failures.fire("mine.wave")
         wave_fn = m._wave_local if use_local else m._wave
         new_states, parts = [], []
         for h, prev in zip(self.handles, self._prev):
@@ -844,6 +846,7 @@ class HPrepostMiner:
                 )
                 plan = self._kernel_plan(Cpad, prepared.width)
                 stages["planned_candidates"] += float(len(ranks))
+                failures.fire("mine.wave")
                 new_state, sups = wave_fn(
                     packed,
                     prev_state,

@@ -48,6 +48,7 @@ dist-smoke CI check):
 from __future__ import annotations
 
 import argparse
+import json
 
 from repro.data import corpus, synth
 from repro.mining import MineSpec, MiningEngine, list_miners
@@ -134,6 +135,8 @@ def _serve(args, rows, n_items: int, name: str, spec: MineSpec, mesh):
             print("warm start verified: zero prep stages, served from snapshots")
         if args.tune or args.expect_plans:
             _report_plans(engine, args.expect_plans)
+        if args.stats:
+            print(json.dumps(svc.stats(), indent=2, sort_keys=True, default=str))
     return results
 
 
@@ -148,7 +151,10 @@ def _append_distributed(args, rows, n_items: int, name: str, spec: MineSpec, mes
     import numpy as np
 
     engine = MiningEngine(mesh, snapshot_dir=args.snapshot_dir)
-    dm = engine.distribute(n_items=n_items, workers=args.workers, spec=spec)
+    dm = engine.distribute(
+        n_items=n_items, workers=args.workers, spec=spec,
+        restart_budget=args.respawn,
+    )
     try:
         batches = np.array_split(rows, args.append)
         for i, batch in enumerate(batches):
@@ -186,8 +192,13 @@ def _append_distributed(args, rows, n_items: int, name: str, spec: MineSpec, mes
                 f"  recovered: failovers={st['failovers']} "
                 f"reassigned={st['reassigned_segments']} "
                 f"snapshot_restores={st['reassign_snapshot_restores']} "
-                f"rebuilds={st['reassign_rebuilds']}"
+                f"rebuilds={st['reassign_rebuilds']} "
+                f"respawns={st['respawns']} live={len(dm._live())}"
             )
+            if args.respawn and st["respawns"] == 0:
+                raise SystemExit(
+                    f"--respawn {args.respawn} given but no worker was respawned"
+                )
             if args.snapshot_dir and st["reassign_rebuilds"] != 0:
                 raise SystemExit(
                     f"expected snapshot-only recovery but "
@@ -199,6 +210,8 @@ def _append_distributed(args, rows, n_items: int, name: str, spec: MineSpec, mes
             )
         if args.tune or args.expect_plans:
             _report_plans(engine, args.expect_plans)
+        if args.stats:
+            print(json.dumps(dm.stats, indent=2, sort_keys=True, default=str))
         return results
     finally:
         dm.close()
@@ -293,6 +306,18 @@ def main(argv=None):
              "(coordinator/worker over RPC) and place segments on them",
     )
     ap.add_argument(
+        "--respawn", type=int, default=0, metavar="N",
+        help="with --workers: restart budget — dead workers are replaced by "
+             "freshly spawned ones (segments migrate back snapshot-first) up "
+             "to N times before the pool is allowed to shrink",
+    )
+    ap.add_argument(
+        "--stats", action="store_true",
+        help="after serving, dump the full operator stats snapshot as JSON "
+             "(admission/shed/deadline/retry/respawn counters and per-layer "
+             "drill-down; with --workers, the coordinator's stats dict)",
+    )
+    ap.add_argument(
         "--kill-worker", action="store_true",
         help="with --workers: after the first sweep, hard-kill one worker, "
              "re-mine, and fail unless the answers are bit-identical (and, "
@@ -331,6 +356,11 @@ def main(argv=None):
         ap.error("--workers needs --append N (the distributed ingest path)")
     if args.kill_worker and args.workers < 2:
         ap.error("--kill-worker needs --workers >= 2 (someone must survive)")
+    if args.respawn and not args.workers:
+        ap.error("--respawn needs --workers (it budgets worker restarts)")
+    if args.stats and not (args.serve or args.workers):
+        ap.error("--stats dumps the service/coordinator snapshot; "
+                 "use it with --serve or --workers")
 
     from repro.launch.mesh import make_mesh_from_spec
 

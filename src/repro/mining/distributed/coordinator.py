@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import json
 import multiprocessing as mp
 import os
 import threading
@@ -34,6 +35,9 @@ import time
 
 import numpy as np
 
+from repro.checkpoint.atomic import (
+    fsync_write, replace_file_atomic, save_array, write_dir_atomic,
+)
 from repro.core import encoding as enc
 from repro.mining.distributed import placement
 from repro.mining.distributed import protocol as pr
@@ -49,11 +53,16 @@ _digest = MiningEngine._digest
 
 
 class WorkerDied(RuntimeError):
-    """One worker stopped answering (EOF, reset, or reply timeout)."""
+    """One worker stopped answering (EOF, reset, or reply timeout).
 
-    def __init__(self, worker_id: int, why: str = ""):
+    ``timeout`` distinguishes a reply that never came (retryable: resend
+    with a fresh seq; a late duplicate reply is skipped as a stale frame)
+    from a connection that is provably gone (resending cannot help)."""
+
+    def __init__(self, worker_id: int, why: str = "", *, timeout: bool = False):
         super().__init__(f"worker {worker_id} died" + (f": {why}" if why else ""))
         self.worker_id = worker_id
+        self.timeout = timeout
 
 
 class NoLiveWorkers(RuntimeError):
@@ -153,6 +162,8 @@ class DistributedMiner:
                  spec: MineSpec | None = None, stream_spec: StreamSpec | None = None,
                  snapshot_dir: str | None = None, heartbeat_s: float = 0.0,
                  rpc_timeout_s: float = 180.0, spawn_timeout_s: float = 120.0,
+                 rpc_attempts: int = 3, rpc_backoff_s: float = 0.05,
+                 restart_budget: int = 0, checkpoint_dir: str | None = None,
                  name: str = "default"):
         if workers < 1:
             raise ValueError(f"need at least 1 worker, got {workers}")
@@ -178,10 +189,19 @@ class DistributedMiner:
             snapshot_dir = engine.snapshot_store.dir
         self.snapshot_dir = snapshot_dir
         self.rpc_timeout_s = float(rpc_timeout_s)
+        self.rpc_attempts = max(1, int(rpc_attempts))
+        self.rpc_backoff_s = float(rpc_backoff_s)
         self.heartbeat_s = float(heartbeat_s)
+        self.spawn_timeout_s = float(spawn_timeout_s)
+        # workers re-spawned after death, total, before the pool is allowed
+        # to shrink permanently. Default 0 = PR 6 behavior (tests assert a
+        # killed worker stays gone); production serves pass a real budget.
+        self.restart_budget = int(restart_budget)
+        self.checkpoint_dir = checkpoint_dir
         self.db = SegmentedDB(n_items)  # global ranks/counts/C/n_rows only
         self._segments: dict[int, SegmentMeta] = {}
         self._next_seg = 0
+        self._empty_rows: list[int] = []  # row counts of empty appends
         self._op_lock = threading.RLock()
         self.stats = {
             "appends": 0, "queries": 0, "empty_batches": 0,
@@ -189,6 +209,9 @@ class DistributedMiner:
             "failovers": 0, "query_retries": 0,
             "reassigned_segments": 0, "reassign_snapshot_restores": 0,
             "reassign_rebuilds": 0,
+            "rpc_timeouts": 0, "rpc_retries": 0,
+            "respawns": 0, "respawn_failures": 0,
+            "restored_appends": 0, "checkpoint_failures": 0,
         }
         self._listener = Listener()
         self._workers: dict[int, WorkerHandle] = {}
@@ -200,10 +223,13 @@ class DistributedMiner:
                 target=self._monitor_loop, name=f"dist-hb-{name}", daemon=True
             )
             self._monitor.start()
+        if self.checkpoint_dir is not None:
+            self._restore_checkpoint()
 
     # ------------------------------------------------------------ lifecycle
-    def _spawn_workers(self, n: int, spawn_timeout_s: float) -> None:
-        # spawn (not fork): each worker initializes its own jax runtime
+    def _spawn_procs(self, wids: list[int]):
+        """Start worker processes for ``wids`` (spawn, not fork: each
+        worker initializes its own jax runtime)."""
         ctx = mp.get_context("spawn")
         src_root = os.path.dirname(os.path.dirname(os.path.dirname(
             os.path.dirname(os.path.abspath(__file__)))))
@@ -213,7 +239,7 @@ class DistributedMiner:
                 src_root + (os.pathsep + path if path else "")
             )
         procs = {}
-        for wid in range(n):
+        for wid in wids:
             p = ctx.Process(
                 target=worker_main,
                 args=(self._listener.address, wid, self.n_items, self.spec,
@@ -222,14 +248,20 @@ class DistributedMiner:
             )
             p.start()
             procs[wid] = p
+        return procs
+
+    def _accept_hellos(self, procs: dict, spawn_timeout_s: float) -> None:
         deadline = time.monotonic() + spawn_timeout_s
-        for _ in range(n):
+        for _ in range(len(procs)):
             chan = self._listener.accept(max(deadline - time.monotonic(), 0.1))
             hello = chan.recv(max(deadline - time.monotonic(), 0.1))
             if hello.get("op") != pr.OP_HELLO:
                 raise pr.ProtocolError(f"expected hello, got {hello!r}")
             wid = int(hello["worker_id"])
             self._workers[wid] = WorkerHandle(wid=wid, chan=chan, proc=procs[wid])
+
+    def _spawn_workers(self, n: int, spawn_timeout_s: float) -> None:
+        self._accept_hellos(self._spawn_procs(list(range(n))), spawn_timeout_s)
 
     def close(self) -> None:
         self._stop.set()
@@ -280,13 +312,16 @@ class DistributedMiner:
 
     def _expect(self, w: WorkerHandle, seq: int, timeout: float | None = None):
         """The reply for ``seq``, skipping stale frames: after an aborted
-        (failed-over) query, a surviving worker may still flush replies
-        for waves this coordinator stopped caring about."""
+        (failed-over) query — or a timed-out-and-retried request — a
+        worker may still flush replies for seqs this coordinator stopped
+        caring about."""
         timeout = self.rpc_timeout_s if timeout is None else timeout
         while True:
             try:
                 rep = w.chan.recv(timeout)
-            except (pr.ConnectionClosed, TimeoutError, pr.ProtocolError) as e:
+            except TimeoutError as e:
+                raise WorkerDied(w.wid, str(e), timeout=True) from e
+            except (pr.ConnectionClosed, pr.ProtocolError) as e:
                 raise WorkerDied(w.wid, str(e)) from e
             got = rep.get("seq", -1)
             if got < seq:
@@ -300,7 +335,32 @@ class DistributedMiner:
             return rep
 
     def _request(self, w: WorkerHandle, body: dict, timeout: float | None = None):
-        return self._expect(w, self._send(w, body), timeout)
+        """One request/reply exchange, with bounded exponential-backoff
+        retries on reply *timeouts* (``rpc_attempts`` sends total).
+
+        Only request/reply ops route through here — ping, stats, prep,
+        inject, drop, query_end, shutdown — and all of them are idempotent
+        on the worker (a re-prep rebuilds the same content-addressed
+        segment). A retry resends under a fresh seq, so a late duplicate
+        reply for the timed-out send is discarded by ``_expect``'s
+        stale-frame skip. Pipelined wave traffic deliberately does NOT
+        retry: ``dispatch`` advances per-segment merged state on the
+        worker, so the only sound recovery for a lost wave is failover +
+        full deterministic query replay (see ``mine``). A dead connection
+        (reset/EOF) is also never retried — resending cannot help."""
+        attempt = 0
+        while True:
+            try:
+                return self._expect(w, self._send(w, body), timeout)
+            except WorkerDied as e:
+                if not e.timeout:
+                    raise
+                self.stats["rpc_timeouts"] += 1
+                attempt += 1
+                if attempt >= self.rpc_attempts:
+                    raise
+                self.stats["rpc_retries"] += 1
+                time.sleep(min(self.rpc_backoff_s * (2 ** (attempt - 1)), 2.0))
 
     # ------------------------------------------------------------ failover
     def _mark_dead(self, wid: int) -> None:
@@ -315,36 +375,104 @@ class DistributedMiner:
         """Topology change: retire ``wid``, re-place its segments over the
         survivors (best-fit decreasing), each restored snapshot-first —
         same build_segment, same key, so zero recompute when the store
-        holds it. Survivor deaths during the re-place loop fold in."""
+        holds it. Survivor deaths during the re-place loop fold in.
+
+        With a ``restart_budget``, a replacement worker is then spawned
+        and the displaced segments migrate back onto it (PR 6's failover
+        in reverse, also snapshot-first) — the pool only shrinks once the
+        budget is spent."""
         self._mark_dead(wid)
         self.stats["failovers"] += 1
+        displaced: list[int] = []
         while True:
             orphans = [
                 m for m in self._segments.values()
                 if not self._workers[m.worker].alive
             ]
             if not orphans:
-                return
+                break
             loads = self._loads()
             if not loads:
-                raise NoLiveWorkers(
-                    f"all {self.stats['workers_spawned']} workers are gone"
-                )
+                if self._respawn() is None:
+                    raise NoLiveWorkers(
+                        f"all {self.stats['workers_spawned']} workers are gone"
+                    )
+                continue  # the fresh worker re-preps the orphans directly
             plan = placement.replan([(m.seg_id, m.nbytes) for m in orphans], loads)
             try:
                 for seg_id in sorted(plan):
                     m = self._segments[seg_id]
                     rep = self._prep_on(self._workers[plan[seg_id]], m)
                     m.worker = plan[seg_id]
+                    displaced.append(seg_id)
                     self.stats["reassigned_segments"] += 1
                     if rep["source"] == "snapshot":
                         self.stats["reassign_snapshot_restores"] += 1
                     else:
                         self.stats["reassign_rebuilds"] += 1
-                return
+                break
             except WorkerDied as e:
                 self._mark_dead(e.worker_id)
                 continue
+        new_wid = self._respawn()
+        if new_wid is not None:
+            self._rebalance_to(new_wid, displaced)
+        self._checkpoint_manifest()  # placement map changed
+
+    # ------------------------------------------------------------- respawn
+    def _respawn(self) -> int | None:
+        """Spawn one replacement worker (fresh wid — seq state and process
+        handles never alias a dead worker's). None when the budget is
+        spent or the spawn itself failed."""
+        if self.restart_budget <= 0:
+            return None
+        self.restart_budget -= 1
+        wid = max(self._workers) + 1
+        try:
+            self._accept_hellos(self._spawn_procs([wid]), self.spawn_timeout_s)
+        except Exception:
+            self.stats["respawn_failures"] += 1
+            return None
+        self.stats["respawns"] += 1
+        self.stats["workers_spawned"] += 1
+        return wid
+
+    def _rebalance_to(self, wid: int, seg_ids: list[int]) -> None:
+        """Migrate ``seg_ids`` onto worker ``wid``: re-prep there
+        (snapshot-first — the store still holds every segment the dead
+        worker built, so this is a restore, not a rebuild), then drop the
+        temporary copy from the survivor that carried it. Any failure
+        leaves the segment where it was — correctness never depends on
+        the migration, only balance does. A death mid-migration (of the
+        new worker or of a survivor we ask to drop) routes back through
+        ``_failover``, which re-places every dead owner's segments — a
+        segment is never left on a worker nobody serves from."""
+        w = self._workers[wid]
+        for seg_id in seg_ids:
+            m = self._segments.get(seg_id)
+            if m is None:
+                continue
+            old = m.worker
+            try:
+                rep = self._prep_on(w, m)
+            except WorkerDied:
+                self.stats["respawn_failures"] += 1
+                # the fresh worker may already own earlier migrations:
+                # full repair, not just a mark (recursion is bounded by
+                # the restart budget + live worker count)
+                self._failover(wid)
+                return
+            m.worker = wid
+            if rep["source"] == "snapshot":
+                self.stats["reassign_snapshot_restores"] += 1
+            else:
+                self.stats["reassign_rebuilds"] += 1
+            old_w = self._workers.get(old)
+            if old_w is not None and old_w.alive:
+                try:
+                    self._request(old_w, {"op": "drop", "seg_ids": [seg_id]})
+                except WorkerDied as e:
+                    self._failover(e.worker_id)
 
     def _prep_on(self, w: WorkerHandle, m: SegmentMeta):
         return self._request(w, {
@@ -407,16 +535,7 @@ class DistributedMiner:
                     seg_id=seg_id, rows=rows, n_rows_real=len(rows),
                     local_items=local_items, worker=-1,
                 )
-                while True:
-                    loads = self._loads()
-                    if not loads:
-                        raise NoLiveWorkers("no live workers to place the batch on")
-                    wid = placement.choose_worker(loads)
-                    try:
-                        rep = self._prep_on(self._workers[wid], m)
-                        break
-                    except WorkerDied as e:
-                        self._failover(e.worker_id)
+                wid, rep = self._place_segment(m)
                 gr = self.db.rank_of[local_items]
                 self.db.C[np.ix_(gr, gr)] += np.asarray(rep["C"], np.int64)
                 m.worker = wid
@@ -425,8 +544,11 @@ class DistributedMiner:
                 m.digest = self._padded_digest(rows)
                 self._segments[seg_id] = m
                 source = rep["source"]
+                self._checkpoint_append(m)
             else:
                 self.stats["empty_batches"] += 1
+                self._empty_rows.append(len(rows))
+                self._checkpoint_manifest()
             return {
                 "rows": int(len(rows)),
                 "total_rows": int(self.db.n_rows),
@@ -437,6 +559,139 @@ class DistributedMiner:
                 if source != "empty" else -1,
                 "append_s": time.perf_counter() - t0,
             }
+
+    def _place_segment(self, m: SegmentMeta, prefer: int | None = None):
+        """Place (prep) one segment on a live worker: ``(wid, reply)``.
+        ``prefer`` pins the first attempt (checkpoint replay honors the
+        recorded placement when that worker still exists); deaths fold
+        into failover and the placement is retried on the survivors."""
+        while True:
+            loads = self._loads()
+            if not loads:
+                raise NoLiveWorkers("no live workers to place the batch on")
+            wid = prefer if prefer in loads else placement.choose_worker(loads)
+            try:
+                return wid, self._prep_on(self._workers[wid], m)
+            except WorkerDied as e:
+                prefer = None
+                self._failover(e.worker_id)
+
+    # ----------------------------------------------------------- checkpoint
+    # The coordinator's durable state is tiny and host-only: the append
+    # log (each batch's raw rows) plus a manifest (append order, empty-
+    # batch row counts, placement map). Everything else — ranks, counts,
+    # C, segment N-lists — is deterministically derivable by replaying
+    # appends, with the workers' content-addressed snapshot store making
+    # the replay a warm restore instead of a recompute. Entry dirs are
+    # written with ``write_dir_atomic`` and the manifest with
+    # ``replace_file_atomic``, so a crash mid-checkpoint can only lose
+    # the latest append, never corrupt the log.
+    CK_SCHEMA = 1
+
+    def _ck_entry(self, seg_id: int) -> str:
+        return os.path.join(self.checkpoint_dir, f"seg-{int(seg_id):06d}")
+
+    def _checkpoint_append(self, m: SegmentMeta) -> None:
+        """Persist one appended batch + the updated manifest. Best-effort:
+        a full/readonly disk degrades durability, never the append."""
+        if self.checkpoint_dir is None:
+            return
+        try:
+            os.makedirs(self.checkpoint_dir, exist_ok=True)
+
+            def writer(tmp):
+                save_array(os.path.join(tmp, "rows.npy"), np.asarray(m.rows, np.int32))
+                fsync_write(os.path.join(tmp, "meta.json"), json.dumps({
+                    "seg_id": int(m.seg_id), "n_rows_real": int(m.n_rows_real),
+                }).encode())
+
+            write_dir_atomic(self._ck_entry(m.seg_id), writer)
+        except Exception:
+            self.stats["checkpoint_failures"] += 1
+            return
+        self._checkpoint_manifest()
+
+    def _checkpoint_manifest(self) -> None:
+        if self.checkpoint_dir is None:
+            return
+        try:
+            os.makedirs(self.checkpoint_dir, exist_ok=True)
+            manifest = {
+                "schema": self.CK_SCHEMA,
+                "n_items": int(self.n_items),
+                "segments": [int(s) for s in sorted(self._segments)],
+                "placement": {
+                    str(s): int(self._segments[s].worker)
+                    for s in sorted(self._segments)
+                },
+                "empty_rows": [int(n) for n in self._empty_rows],
+            }
+            replace_file_atomic(
+                os.path.join(self.checkpoint_dir, "manifest.json"),
+                json.dumps(manifest, sort_keys=True).encode(),
+            )
+        except Exception:
+            self.stats["checkpoint_failures"] += 1
+
+    def _restore_checkpoint(self) -> None:
+        """Replay the append log into this (fresh) coordinator: same batch
+        order -> same rank space, counts, C, and seg_ids — an identical
+        ``SegmentedDB``. Placement honors the recorded map where those
+        worker ids exist, and segment preps restore snapshot-first, so a
+        restart of a large database is I/O, not recompute."""
+        path = os.path.join(self.checkpoint_dir, "manifest.json")
+        try:
+            with open(path) as f:
+                manifest = json.load(f)
+        except OSError:
+            os.makedirs(self.checkpoint_dir, exist_ok=True)
+            return  # nothing recorded yet: a fresh database
+        if manifest.get("schema") != self.CK_SCHEMA:
+            raise ValueError(
+                f"checkpoint schema {manifest.get('schema')!r} unsupported"
+            )
+        if int(manifest.get("n_items", -1)) != self.n_items:
+            raise ValueError(
+                f"checkpoint was written for n_items={manifest.get('n_items')}, "
+                f"this coordinator has n_items={self.n_items}"
+            )
+        placed = {int(k): int(v) for k, v in manifest.get("placement", {}).items()}
+        with self._op_lock:
+            for seg_ref in manifest.get("segments", []):
+                seg_id = int(seg_ref)
+                rows = np.load(os.path.join(self._ck_entry(seg_id), "rows.npy"))
+                self._replay_append(seg_id, rows, prefer=placed.get(seg_id))
+                self.stats["restored_appends"] += 1
+            for n in manifest.get("empty_rows", []):
+                self.db.n_rows += int(n)
+                self._empty_rows.append(int(n))
+                self.stats["appends"] += 1
+                self.stats["empty_batches"] += 1
+                self.stats["restored_appends"] += 1
+
+    def _replay_append(self, seg_id: int, rows: np.ndarray,
+                       prefer: int | None) -> None:
+        """One checkpointed append, re-registered and re-placed — the body
+        of ``append`` minus validation (the original append did it) and
+        minus re-checkpointing what is already on disk."""
+        hist = enc.item_support(rows, self.n_items)
+        self.db.register_batch(hist)
+        self.db.n_rows += len(rows)
+        self.stats["appends"] += 1
+        local_items = self.db.present_in_order(hist)
+        self._next_seg = max(self._next_seg, seg_id + 1)
+        m = SegmentMeta(
+            seg_id=seg_id, rows=rows, n_rows_real=len(rows),
+            local_items=local_items, worker=-1,
+        )
+        wid, rep = self._place_segment(m, prefer=prefer)
+        gr = self.db.rank_of[local_items]
+        self.db.C[np.ix_(gr, gr)] += np.asarray(rep["C"], np.int64)
+        m.worker = wid
+        m.nbytes = int(rep["nbytes"])
+        m.prep_bytes = int(rep["prep_bytes"])
+        m.digest = self._padded_digest(rows)
+        self._segments[seg_id] = m
 
     def _padded_digest(self, rows: np.ndarray) -> str:
         pad = self.stream_spec.row_pad

@@ -12,16 +12,40 @@ import socket
 import threading
 import time
 
+from repro.fault import failures
 from repro.mining.distributed.protocol import ConnectionClosed, recv_msg, send_msg
+
+
+def _harden(sock: socket.socket) -> None:
+    """Socket-level liveness: TCP_NODELAY (small RPC frames must not sit
+    in Nagle buffers) plus SO_KEEPALIVE with aggressive probe timing where
+    the platform exposes it, so a silently-dropped peer (power loss,
+    network partition — no FIN ever arrives) surfaces as an ``OSError`` on
+    the next blocking recv instead of hanging forever. The TCP_KEEP*
+    constants are Linux-specific; elsewhere keepalive runs with kernel
+    defaults (hours), and the per-call recv timeouts above carry liveness."""
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    sock.setsockopt(socket.SOL_SOCKET, socket.SO_KEEPALIVE, 1)
+    for opt, val in (("TCP_KEEPIDLE", 30), ("TCP_KEEPINTVL", 10), ("TCP_KEEPCNT", 3)):
+        if hasattr(socket, opt):
+            try:
+                sock.setsockopt(socket.IPPROTO_TCP, getattr(socket, opt), val)
+            except OSError:
+                pass
 
 
 class Channel:
     """One connected peer. ``send`` is locked (heartbeat and caller
-    threads may both write); ``recv`` is single-consumer by design."""
+    threads may both write); ``recv`` is single-consumer by design.
+
+    Both directions carry chaos points (``rpc.send`` / ``rpc.recv``): an
+    installed injector can fail any frame with any exception type, which
+    is how the soak proves the coordinator's timeout/retry/failover
+    ladder without real packet loss."""
 
     def __init__(self, sock: socket.socket):
         self.sock = sock
-        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        _harden(self.sock)
         self._send_lock = threading.Lock()
         self._closed = False
 
@@ -29,12 +53,14 @@ class Channel:
         with self._send_lock:
             if self._closed:
                 raise ConnectionClosed("channel closed")
+            failures.fire("rpc.send")  # chaos: frame lost on the way out
             try:
                 send_msg(self.sock, obj)
             except (ConnectionResetError, BrokenPipeError, OSError) as e:
                 raise ConnectionClosed(str(e)) from e
 
     def recv(self, timeout: float | None = None):
+        failures.fire("rpc.recv")  # chaos: reply lost / delayed past timeout
         self.sock.settimeout(timeout)
         try:
             return recv_msg(self.sock)

@@ -145,7 +145,7 @@ class Worker:
         return {}
 
     # ------------------------------------------------------------- serving
-    def serve(self, chan) -> None:
+    def serve(self, chan, *, idle_timeout_s: float = 30.0) -> None:
         handlers = {
             pr.OP_PREP: self._op_prep,
             "drop": self._op_drop,
@@ -156,8 +156,21 @@ class Worker:
             pr.OP_STATS: self._op_stats,
             pr.OP_INJECT: self._op_inject,
         }
+        parent = os.getppid()
         while True:
-            msg = chan.recv(None)
+            # idle-poll rather than block forever: the bounded recv
+            # timeout lets a silently-dropped coordinator surface through
+            # TCP keepalive as ConnectionClosed (the worker then exits via
+            # worker_main) and gives us a beat to notice our parent died
+            # without ever sending a FIN (kill -9 on the whole process
+            # group leaves no one to close the socket; reparenting is the
+            # one signal that always arrives)
+            try:
+                msg = chan.recv(idle_timeout_s)
+            except TimeoutError:
+                if os.getppid() != parent:  # reparented: coordinator is gone
+                    return
+                continue
             op = msg["op"]
             die_after = False
             if self._fault is not None and self._fault.matches(op):

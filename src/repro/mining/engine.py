@@ -64,6 +64,7 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
+from repro.fault import failures
 from repro.mining.registry import Miner, get_miner
 from repro.mining.result import MineResult
 from repro.mining.spec import MineSpec
@@ -72,11 +73,17 @@ from repro.mining.service.store import SnapshotStore
 
 @dataclasses.dataclass
 class MineRequest:
-    """One unit of mining traffic: a database plus its spec."""
+    """One unit of mining traffic: a database plus its spec.
+
+    ``deadline_at`` is an absolute ``time.monotonic()`` instant stamped by
+    the service from ``spec.deadline_s`` at admission; the scheduler drops
+    (``DeadlineExceeded``) requests whose deadline passes before their
+    device work starts. None = no deadline."""
 
     rows: object  # (R, L) padded transaction matrix
     n_items: int
     spec: MineSpec
+    deadline_at: float | None = None
 
 
 class MiningEngine:
@@ -532,6 +539,19 @@ class MiningEngine:
             self.stats["submits"] += 1
         return s.mine(spec)
 
+    def stream_stats(self) -> dict:
+        """Per-stream telemetry snapshot: ``{name: stats_dict}`` for every
+        live streaming/distributed database (operator surface — the
+        distributed dicts carry rpc_retries / respawns / failovers)."""
+        with self._lock:
+            streams = dict(self._streams)
+        out = {}
+        for name, s in streams.items():
+            stats = getattr(s, "stats", None)
+            if isinstance(stats, dict):
+                out[name] = dict(stats)
+        return out
+
     # ------------------------------------------------------ planned batches
     def _plan_key(self, req: MineRequest):
         """Group key for shared-prep planning, or None for the one-shot path.
@@ -555,6 +575,7 @@ class MiningEngine:
         acquires while group g's wave loop is still draining. Raises the
         prepare ``ValueError`` when the group floor trips a guard — the
         caller degrades to per-request submits."""
+        failures.fire("service.prep")  # chaos: prep-thread death mid-acquire
         fe = self.frontend("hprepost")
         rows = np.asarray(reqs[0].rows)
         n_rows = len(rows)

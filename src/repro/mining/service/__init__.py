@@ -1,25 +1,37 @@
 """repro.mining.service — the resident mining service layer.
 
-Three modules on top of ``MiningEngine`` (the ROADMAP's serving
+Four modules on top of ``MiningEngine`` (the ROADMAP's serving
 follow-ups, done):
 
   ``store``      cross-process persistence: a content-addressed on-disk
                  snapshot store of serialized PreparedDBs, so a cold
                  process warm-starts with zero prep stages
+  ``admission``  backpressure: the bounded admission queue (depth +
+                 in-flight byte budgets, oldest-deadline-first shedding)
+                 and the typed service errors ``Overloaded`` /
+                 ``DeadlineExceeded`` / ``ServiceClosed``
   ``scheduler``  async execution across *groups*: group g+1's prepare is
                  dispatched while group g's wave loop drains; host
-                 algorithms run on worker threads alongside device groups
+                 algorithms run on worker threads alongside device
+                 groups; priority ordering + deadline drops
   ``service``    the ``MiningService`` facade: ``submit() -> Future``, a
                  batching window that coalesces concurrent requests into
-                 planned groups, graceful drain, per-request telemetry
+                 planned groups, crash-proof worker loop, graceful
+                 drain-or-fail close, per-request telemetry
 
 ``MiningService``/``GroupScheduler`` are imported lazily: the engine
 itself constructs a ``SnapshotStore`` (warm-start hooks), and an eager
 import here would cycle back through ``repro.mining.engine``.
 """
+from repro.mining.service.admission import (
+    AdmissionQueue, DeadlineExceeded, Overloaded, ServiceClosed, ServiceError,
+)
 from repro.mining.service.store import SnapshotStore
 
-__all__ = ["GroupScheduler", "MiningService", "SnapshotStore"]
+__all__ = [
+    "AdmissionQueue", "DeadlineExceeded", "GroupScheduler", "MiningService",
+    "Overloaded", "ServiceClosed", "ServiceError", "SnapshotStore",
+]
 
 
 def __getattr__(name: str):

@@ -21,15 +21,26 @@ Unlike ``submit_many``, singleton hprepost groups stay *groups* here: two
 back-to-back requests on two distinct databases are precisely the case
 where overlapping prepare(g+1) with mine(g) pays.
 
+QoS (PR 8): within one batch, device groups are served highest
+``spec.priority`` first (max over the group's members; FIFO between
+equals), and any request whose ``deadline_at`` has already passed is
+dropped with a typed ``DeadlineExceeded`` *before* its device work —
+checked at classification and again right before its group serves, so a
+deadline that expires while earlier groups drain still saves the work.
+
 Results preserve request order. With ``return_exceptions=True`` a failed
 request yields its exception object in the result slot (the service maps
 those onto per-request futures); otherwise the first failure raises.
 """
 from __future__ import annotations
 
+import threading
+import time
+
 from concurrent.futures import ThreadPoolExecutor
 
 from repro.mining.engine import MineRequest, MiningEngine
+from repro.mining.service.admission import DeadlineExceeded
 
 
 class GroupScheduler:
@@ -46,6 +57,7 @@ class GroupScheduler:
             max_workers=max(1, host_workers), thread_name_prefix="mine-host"
         )
         self._prep_pool = ThreadPoolExecutor(max_workers=1, thread_name_prefix="mine-prep")
+        self._stats_lock = threading.Lock()  # counters touched off-thread
         self.stats = {
             "batches": 0,
             "device_groups": 0,
@@ -53,6 +65,10 @@ class GroupScheduler:
             # prepares that ran while an earlier group was still mining
             "overlapped_prepares": 0,
             "degraded_groups": 0,  # group floor tripped a guard -> per-request
+            # requests resolved with DeadlineExceeded before device work
+            "deadline_dropped": 0,
+            # batches whose group order differed from FIFO due to priority
+            "priority_reordered": 0,
         }
 
     def close(self) -> None:
@@ -80,18 +96,30 @@ class GroupScheduler:
         self.stats["batches"] += 1
 
         for i, r in enumerate(requests):
+            if self._expired(r):  # dead on arrival: no classification work
+                results[i] = self._drop(r)
+                continue
             key = self.engine._plan_key(r)
             if key is None:
                 self.stats["host_requests"] += 1
-                host_futures.append(
-                    (i, self._host_pool.submit(self._one, r))
-                )
+                host_futures.append((i, self._submit_host(r)))
             elif key in by_key:
                 groups[by_key[key]][1].append(i)
             else:
                 by_key[key] = len(groups)
                 groups.append((key, [i]))
         self.stats["device_groups"] += len(groups)
+
+        # highest-priority group first (max over members; stable, so equal
+        # priorities keep FIFO order and the default priority=0 batch is
+        # byte-identical to the pre-QoS scheduler)
+        order = sorted(
+            range(len(groups)),
+            key=lambda g: -max(requests[i].spec.priority for i in groups[g][1]),
+        )
+        if order != sorted(order):
+            self.stats["priority_reordered"] += 1
+        groups = [groups[g] for g in order]
 
         # pipeline, one group ahead: group g+1's acquire is handed to the
         # prep thread right before group g's waves start draining here, so
@@ -102,16 +130,12 @@ class GroupScheduler:
         group_reqs = [[requests[i] for i in idxs] for _, idxs in groups]
         ahead = None
         if self.overlap and groups:
-            ahead = self._prep_pool.submit(
-                self.engine._group_acquire, group_reqs[0], groups[0][0]
-            )
+            ahead = self._submit_prep(group_reqs[0], groups[0][0])
         for gi, (key, idxs) in enumerate(groups):
             reqs = group_reqs[gi]
             acq_fut, ahead = ahead, None
             if self.overlap and gi + 1 < len(groups):
-                ahead = self._prep_pool.submit(
-                    self.engine._group_acquire, group_reqs[gi + 1], groups[gi + 1][0]
-                )
+                ahead = self._submit_prep(group_reqs[gi + 1], groups[gi + 1][0])
             try:
                 acq = acq_fut.result() if acq_fut is not None \
                     else self.engine._group_acquire(reqs, key)
@@ -128,16 +152,27 @@ class GroupScheduler:
                 for i in idxs:
                     results[i] = e
                 continue
+            # deadline recheck at serve time: members whose deadline passed
+            # while earlier groups drained are dropped without device work
+            live: list[tuple[int, MineRequest]] = []
+            for i, r in zip(idxs, reqs):
+                if self._expired(r):
+                    results[i] = self._drop(r)
+                else:
+                    live.append((i, r))
+            if not live:
+                continue
             overlapped = self.overlap and acq[2] == "built" and gi > 0
             if overlapped:
                 self.stats["overlapped_prepares"] += 1
+            live_reqs = [r for _, r in live]
             try:
-                group_out = self.engine._group_serve(reqs, acq)
+                group_out = self.engine._group_serve(live_reqs, acq)
                 for res in group_out:
                     res.service_stats["prep_overlapped"] = overlapped
             except Exception as e:  # serve failure: pin it to every member
-                group_out = [e] * len(reqs)
-            for i, res in zip(idxs, group_out):
+                group_out = [e] * len(live_reqs)
+            for (i, _), res in zip(live, group_out):
                 results[i] = res
 
         for i, fut in host_futures:
@@ -149,9 +184,48 @@ class GroupScheduler:
                     raise res
         return results
 
+    # --------------------------------------------------------------- helpers
+    @staticmethod
+    def _expired(r: MineRequest) -> bool:
+        return r.deadline_at is not None and time.monotonic() > r.deadline_at
+
+    def _drop(self, r: MineRequest) -> DeadlineExceeded:
+        with self._stats_lock:
+            self.stats["deadline_dropped"] += 1
+        return DeadlineExceeded(
+            f"deadline_s={r.spec.deadline_s} passed before mining started"
+        )
+
+    class _Done:
+        """Pre-resolved stand-in for a pool future (pool already shut down)."""
+
+        def __init__(self, value):
+            self._value = value
+
+        def result(self):
+            return self._value
+
+    def _submit_host(self, r: MineRequest):
+        """Submit ``_one`` to the host pool; a dead/shut-down pool degrades
+        to inline execution instead of killing the batch."""
+        try:
+            return self._host_pool.submit(self._one, r)
+        except RuntimeError:
+            return self._Done(self._one(r))
+
+    def _submit_prep(self, reqs, key):
+        """Submit a group acquire to the prep thread; None when the pool is
+        dead (the caller then acquires inline — slower, never wrong)."""
+        try:
+            return self._prep_pool.submit(self.engine._group_acquire, reqs, key)
+        except RuntimeError:
+            return None
+
     def _one(self, r: MineRequest):
         """One-shot submit with the error held as a value (so a failing
         request costs its own slot, never the batch)."""
+        if self._expired(r):  # checked at execution, not submission: a host
+            return self._drop(r)  # request can expire waiting for a pool slot
         try:
             return self.engine.submit(r.rows, r.n_items, r.spec)
         except Exception as e:

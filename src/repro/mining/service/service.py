@@ -11,11 +11,33 @@ bound, the engine underneath warm-starts from (and spills to) the
 persistent PreparedDB store, so a freshly started service serves a known
 database with zero prep stages.
 
+Hardening (PR 8) — the invariant is *every accepted Future resolves*,
+with a result or a typed error, whatever fails:
+
+  - Admission control: ``max_queue_depth`` / ``max_queue_bytes`` bound the
+    queue (``repro.mining.service.admission``). A request that does not
+    fit resolves immediately with ``Overloaded`` — backpressure, not
+    silent buffering — and when the incoming deadline is tighter than a
+    queued one, the oldest-deadline request is shed instead.
+  - QoS: ``spec.priority`` orders device groups, ``spec.deadline_s``
+    drops late requests with ``DeadlineExceeded`` before device work
+    (both enforced by the scheduler; stream queries check their deadline
+    right before executing).
+  - Crash-proof worker: any batch-serving failure (prep-thread death,
+    executor shutdown, chaos injection) resolves every Future the batch
+    owns with that error and the loop continues (``worker_restarts``
+    counts them). If the loop itself ever exits, still-queued requests
+    are failed with ``ServiceClosed`` — no orphaned Futures, ever.
+
 Telemetry rides each ``MineResult.service_stats``: queue time, batch
 size, where the prep came from (built / LRU cache / snapshot) and whether
-it overlapped an earlier group's mining. ``drain()`` blocks until every
-accepted request has resolved; ``close()`` drains and stops the worker
-(also available as a context manager).
+it overlapped an earlier group's mining. ``stats`` stays the historical
+counter dict *and* is callable: ``service.stats()`` returns the full
+operator snapshot (admission/shed/deadline/retry/respawn counters,
+scheduler + engine + per-stream distributed stats). ``drain()`` blocks
+until every accepted request has resolved; ``close()`` drains — or, with
+``drain=False``, fails queued requests with ``ServiceClosed`` — and stops
+the worker (also available as a context manager).
 
 Streaming traffic (``repro.mining.stream``) rides the same queue:
 ``append`` and ``submit_stream`` return Futures and execute in arrival
@@ -28,24 +50,44 @@ import dataclasses
 import queue
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from typing import Sequence
 
 import numpy as np
 
+from repro.fault import failures
 from repro.mining.engine import MineRequest, MiningEngine
 from repro.mining.result import MineResult
+from repro.mining.service.admission import (
+    AdmissionQueue, DeadlineExceeded, Overloaded, ServiceClosed,
+)
 from repro.mining.service.scheduler import GroupScheduler
 from repro.mining.spec import MineSpec
 
 
-@dataclasses.dataclass
-class _Pending:
+@dataclasses.dataclass(eq=False)  # identity ==: AdmissionQueue removes by it,
+class _Pending:                   # and field-wise eq chokes on array payloads
     req: MineRequest | None  # None for stream operations
     future: Future
     submitted_at: float
     kind: str = "mine"  # "mine" | "stream" (append / stream query)
     run: object = None  # stream ops: zero-arg callable executed in order
+    deadline_at: float | None = None  # monotonic instant; admission + QoS
+    priority: int = 0
+    nbytes: int = 0  # admission byte accounting (rows payload)
+    released: bool = False  # accounting done exactly once (see _finish)
+
+
+class _ServiceStats(dict):
+    """``service.stats`` — the historical counter dict, now also callable:
+    ``service.stats()`` returns the merged operator snapshot."""
+
+    def __init__(self, snapshot, **counters):
+        super().__init__(**counters)
+        self._snapshot = snapshot
+
+    def __call__(self) -> dict:
+        return self._snapshot()
 
 
 class MiningService:
@@ -56,11 +98,17 @@ class MiningService:
     in one planned batch (sweep requests on one database become one
     shared-prep group; distinct databases become pipelined groups). 0
     serves strictly one request per batch.
+
+    ``max_queue_depth`` / ``max_queue_bytes`` bound admission (None =
+    unbounded, the pre-hardening behavior): depth counts queued requests,
+    bytes count the ``rows`` payload of everything admitted but not yet
+    resolved. Requests that do not fit resolve with ``Overloaded``.
     """
 
     def __init__(self, engine: MiningEngine | None = None, *, mesh=None,
                  snapshot_dir: str | None = None, batch_window_s: float = 0.02,
-                 host_workers: int = 4, **engine_kwargs):
+                 host_workers: int = 4, max_queue_depth: int | None = None,
+                 max_queue_bytes: int | None = None, **engine_kwargs):
         if engine is not None and (mesh is not None or snapshot_dir is not None or engine_kwargs):
             raise ValueError("pass an engine or engine-construction kwargs, not both")
         self.engine = engine if engine is not None else MiningEngine(
@@ -68,11 +116,17 @@ class MiningService:
         )
         self.scheduler = GroupScheduler(self.engine, host_workers=host_workers)
         self.batch_window_s = float(batch_window_s)
-        self.stats = {"requests": 0, "batches": 0, "max_batch": 0}
-        self._q: queue.SimpleQueue = queue.SimpleQueue()
+        self.stats = _ServiceStats(
+            self._stats_snapshot,
+            requests=0, batches=0, max_batch=0,
+            worker_restarts=0,  # batches whose serve crashed (loop survived)
+            stream_deadline_dropped=0,  # stream ops expired before running
+        )
+        self._q = AdmissionQueue(max_depth=max_queue_depth, max_bytes=max_queue_bytes)
         self._cv = threading.Condition()
         self._outstanding = 0
         self._closed = False
+        self._worker_dead = False
         self._worker = threading.Thread(
             target=self._loop, name="mining-service", daemon=True
         )
@@ -81,31 +135,73 @@ class MiningService:
     # ------------------------------------------------------------ submission
     def submit(self, rows, n_items: int, spec: MineSpec) -> Future:
         """Enqueue one request; the Future resolves to its ``MineResult``
-        (or raises what the request raised)."""
-        fut: Future = Future()
-        with self._cv:
-            # the closed check and the accounting are one atomic step:
-            # close() flips the flag under the same lock, so a request is
-            # either rejected here or counted before close()'s drain runs
-            if self._closed:
-                raise RuntimeError("MiningService is closed")
-            self._outstanding += 1
-            self.stats["requests"] += 1
-        self._q.put(_Pending(MineRequest(rows, n_items, spec), fut, time.monotonic()))
-        return fut
+        (or raises what the request raised — including the typed admission
+        errors ``Overloaded`` / ``DeadlineExceeded``)."""
+        arr = np.asarray(rows)
+        deadline_at = (
+            time.monotonic() + spec.deadline_s if spec.deadline_s is not None else None
+        )
+        return self._enqueue(_Pending(
+            MineRequest(rows, n_items, spec, deadline_at=deadline_at),
+            Future(), time.monotonic(),
+            deadline_at=deadline_at, priority=spec.priority, nbytes=int(arr.nbytes),
+        ))
 
     def submit_many(self, requests: Sequence[MineRequest]) -> list[Future]:
         return [self.submit(r.rows, r.n_items, r.spec) for r in requests]
 
-    def _submit_stream_op(self, run) -> Future:
-        fut: Future = Future()
+    def _submit_stream_op(self, run, *, spec: MineSpec | None = None,
+                          nbytes: int = 0) -> Future:
+        deadline_at = (
+            time.monotonic() + spec.deadline_s
+            if spec is not None and spec.deadline_s is not None else None
+        )
+        return self._enqueue(_Pending(
+            None, Future(), time.monotonic(), kind="stream", run=run,
+            deadline_at=deadline_at,
+            priority=spec.priority if spec is not None else 0,
+            nbytes=int(nbytes),
+        ))
+
+    def _enqueue(self, p: _Pending) -> Future:
+        """Admission: the closed/dead check, the chaos point, and the queue
+        offer are one atomic step under ``_cv`` — a request is either
+        rejected here or guaranteed to be observed by the worker (or by
+        the worker's exit drain). Every path returns a Future that WILL
+        resolve."""
+        shed: list[_Pending] = []
+        admitted = False
+        enq_err: BaseException | None = None
         with self._cv:
-            if self._closed:
-                raise RuntimeError("MiningService is closed")
-            self._outstanding += 1
-            self.stats["requests"] += 1
-        self._q.put(_Pending(None, fut, time.monotonic(), kind="stream", run=run))
-        return fut
+            if self._closed or self._worker_dead:
+                raise ServiceClosed("MiningService is closed")
+            try:
+                failures.fire("service.enqueue")
+            except BaseException as e:
+                enq_err = e
+            else:
+                admitted, shed = self._q.offer(p)
+                if admitted:
+                    self._outstanding += 1
+                    self.stats["requests"] += 1
+        # resolve losers outside the lock (their callbacks run inline)
+        for s in shed:
+            self._resolve_exc(s.future, Overloaded(
+                "request shed from the admission queue by later-deadline work",
+                shed=True, depth=self._q.depth,
+                bytes_in_flight=self._q.bytes_in_flight,
+            ))
+            # offer() already reclaimed shed bytes; only undo the counting
+            self._finish(s, release_bytes=False)
+        if enq_err is not None:
+            self._resolve_exc(p.future, enq_err)
+        elif not admitted:
+            self._resolve_exc(p.future, Overloaded(
+                "admission queue full "
+                f"(max_depth={self._q.max_depth}, max_bytes={self._q.max_bytes})",
+                depth=self._q.depth, bytes_in_flight=self._q.bytes_in_flight,
+            ))
+        return p.future
 
     def append(self, rows, n_items: int | None = None, *, stream: str = "default",
                spec: MineSpec | None = None, stream_spec=None) -> Future:
@@ -121,14 +217,15 @@ class MiningService:
         return self._submit_stream_op(
             lambda: self.engine.append(
                 rows, n_items, stream=stream, spec=spec, stream_spec=stream_spec
-            )
+            ),
+            nbytes=rows.nbytes,
         )
 
     def submit_stream(self, spec: MineSpec, *, stream: str = "default") -> Future:
         """Enqueue a query against the named stream's live ``SegmentedDB``;
         the Future resolves to its ``MineResult``."""
         return self._submit_stream_op(
-            lambda: self.engine.submit_stream(spec, stream=stream)
+            lambda: self.engine.submit_stream(spec, stream=stream), spec=spec
         )
 
     def distribute(self, name: str = "default", **kw):
@@ -144,20 +241,79 @@ class MiningService:
         window coalesces it into one shared-prep group."""
         return [self.submit(rows, n_items, spec.with_(min_sup=s)) for s in min_sups]
 
+    # ------------------------------------------------------------ accounting
+    @staticmethod
+    def _resolve_exc(fut: Future, exc: BaseException) -> None:
+        """Resolve a Future with an error, tolerating a racing cancel —
+        nothing here may throw, whatever state the caller drove it into."""
+        try:
+            fut.set_exception(exc)
+        except InvalidStateError:
+            pass
+
+    def _finish(self, p: _Pending, *, release_bytes: bool = True) -> None:
+        """Close out one accepted request's accounting, exactly once."""
+        with self._cv:
+            if p.released:
+                return
+            p.released = True
+            self._outstanding -= 1
+            self._cv.notify_all()
+        if release_bytes:
+            self._q.release(p.nbytes)
+
+    def _stats_snapshot(self) -> dict:
+        """The operator view: one dict merging every layer's counters.
+
+        ``counters`` is the flat headline set (admitted / rejected / shed /
+        deadline_dropped / retries / respawns); the nested sections carry
+        each layer's full dict for drill-down."""
+        service = {k: v for k, v in self.stats.items()}
+        adm = self._q.info()
+        sched = dict(self.scheduler.stats)
+        streams = self.engine.stream_stats()
+        return {
+            "counters": {
+                "admitted": adm["admitted"],
+                "rejected": adm["rejected"],
+                "shed": adm["shed"],
+                "deadline_dropped": sched.get("deadline_dropped", 0)
+                + service["stream_deadline_dropped"],
+                "retries": sum(int(s.get("rpc_retries", 0)) for s in streams.values()),
+                "respawns": sum(int(s.get("respawns", 0)) for s in streams.values()),
+            },
+            "service": service,
+            "admission": adm,
+            "scheduler": sched,
+            "engine": {"stats": dict(self.engine.stats),
+                       "cache": self.engine.cache_info()},
+            "streams": streams,
+        }
+
     # ------------------------------------------------------------- lifecycle
     def drain(self) -> None:
         """Block until every accepted request has resolved."""
         with self._cv:
-            self._cv.wait_for(lambda: self._outstanding == 0)
+            self._cv.wait_for(lambda: self._outstanding == 0 or self._worker_dead)
 
-    def close(self) -> None:
-        """Graceful shutdown: stop accepting, drain, stop the worker."""
+    def close(self, *, drain: bool = True) -> None:
+        """Shutdown: stop accepting, then either drain (default — every
+        accepted request resolves normally) or fail still-queued requests
+        fast with ``ServiceClosed`` (``drain=False``; the batch already
+        executing finishes either way), then stop the worker."""
         with self._cv:
             if self._closed:
                 return
             self._closed = True
-        self.drain()
-        self._q.put(None)  # wake + stop the worker
+        if drain:
+            self.drain()
+        else:
+            for p in self._q.drain_queued():
+                self._resolve_exc(p.future, ServiceClosed(
+                    "MiningService closed with drain=False while this request was queued"
+                ))
+                self._finish(p)
+        self._q.put_sentinel()  # wake + stop the worker
         self._worker.join()
         self.scheduler.close()
 
@@ -169,31 +325,69 @@ class MiningService:
 
     # ---------------------------------------------------------- worker loop
     def _loop(self) -> None:
-        while True:
-            try:
-                first = self._q.get(timeout=0.1)
-            except queue.Empty:
-                continue
-            if first is None:
-                return
-            batch = [first]
-            deadline = time.monotonic() + self.batch_window_s
-            stop = False
+        """Crash-proof batch loop: a serve failure resolves every Future
+        the batch owns with that error and the loop continues. The exit
+        drain in ``finally`` is the last line of the no-orphaned-Futures
+        invariant — even an exit nothing anticipated fails what remains."""
+        try:
             while True:
-                timeout = deadline - time.monotonic()
-                if timeout <= 0:
-                    break
-                try:
-                    item = self._q.get(timeout=timeout)
-                except queue.Empty:
-                    break
-                if item is None:
-                    stop = True
-                    break
-                batch.append(item)
-            self._serve(batch)
-            if stop:
-                return
+                batch, stop = self._collect()
+                if batch:
+                    try:
+                        failures.fire("service.serve")  # chaos: worker death
+                        self._serve(batch)
+                    except BaseException as e:
+                        self._fail_batch(batch, e)
+                        with self._cv:
+                            self.stats["worker_restarts"] += 1
+                if stop:
+                    return
+        finally:
+            self._worker_exited()
+
+    def _collect(self) -> tuple[list[_Pending], bool]:
+        """One batching window: ``(batch, stop)``. Empty batch + stop=False
+        is the idle poll tick."""
+        try:
+            first = self._q.get(timeout=0.1)
+        except queue.Empty:
+            return [], False
+        if first is None:
+            return [], True
+        batch = [first]
+        deadline = time.monotonic() + self.batch_window_s
+        while True:
+            timeout = deadline - time.monotonic()
+            if timeout <= 0:
+                return batch, False
+            try:
+                item = self._q.get(timeout=timeout)
+            except queue.Empty:
+                return batch, False
+            if item is None:
+                return batch, True
+            batch.append(item)
+
+    def _fail_batch(self, batch: list[_Pending], exc: BaseException) -> None:
+        """Resolve every unresolved Future in a crashed batch with the
+        crash. Futures ``_serve`` already resolved (or dropped as
+        cancelled) are left alone — ``_finish`` is idempotent."""
+        for p in batch:
+            if not p.future.done():
+                self._resolve_exc(p.future, exc)
+            self._finish(p)
+
+    def _worker_exited(self) -> None:
+        """The worker thread is gone for good: nothing will ever pop the
+        queue again, so fail whatever is still on it."""
+        with self._cv:
+            self._worker_dead = True
+            self._cv.notify_all()
+        for p in self._q.drain_queued():
+            self._resolve_exc(p.future, ServiceClosed(
+                "service worker exited before this request ran"
+            ))
+            self._finish(p)
 
     def _serve(self, batch: list[_Pending]) -> None:
         t_start = time.monotonic()
@@ -206,9 +400,7 @@ class MiningService:
             if p.future.set_running_or_notify_cancel():
                 live.append(p)
             else:
-                with self._cv:
-                    self._outstanding -= 1
-                    self._cv.notify_all()
+                self._finish(p)
         batch = live
         if not batch:
             return
@@ -239,6 +431,12 @@ class MiningService:
                 chunk.append(i)
                 continue
             flush_chunk()
+            if p.deadline_at is not None and time.monotonic() > p.deadline_at:
+                self.stats["stream_deadline_dropped"] += 1
+                results[i] = DeadlineExceeded(
+                    "deadline passed before the stream operation ran"
+                )
+                continue
             try:
                 results[i] = p.run()
             except BaseException as e:
@@ -253,6 +451,4 @@ class MiningService:
                         queue_time_s=t_start - p.submitted_at, batch_size=len(batch)
                     )
                 p.future.set_result(res)
-            with self._cv:
-                self._outstanding -= 1
-                self._cv.notify_all()
+            self._finish(p)

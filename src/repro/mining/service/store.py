@@ -33,6 +33,7 @@ import numpy as np
 from repro.checkpoint.atomic import (
     dir_bytes, fsync_write, is_tmp, prune_oldest, reap_stale_tmp, save_array, write_dir_atomic,
 )
+from repro.fault import failures
 
 MANIFEST = "manifest.json"
 STORE_SCHEMA = 1
@@ -130,6 +131,7 @@ class SnapshotStore:
         entry is condemned: a reader racing another process's atomic
         replace sees a mixed/missing generation on the first read and the
         complete new entry on the second."""
+        failures.fire("snapshot.read")  # chaos: corruption / I/O mid-read
         with self._lock:
             path = self.path_of(key)
             for attempt in (0, 1):

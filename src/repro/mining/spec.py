@@ -47,6 +47,11 @@ class MineSpec:
     # runs the exact legacy path bit-for-bit
     tune: bool = False  # hprepost: resolve block knobs via the persisted
     # KernelTuner instead of the static la/ly/batch_block fields
+    # Service-level QoS, ignored by direct mine() calls: neither field
+    # participates in device config / prep keys (execution-orthogonal).
+    priority: int = 0  # MiningService: higher priority groups serve first
+    deadline_s: float | None = None  # MiningService: drop (DeadlineExceeded)
+    # if not *started* within this many seconds of submit
 
     def __post_init__(self):
         if self.min_sup is not None and self.min_count is not None:
@@ -64,6 +69,8 @@ class MineSpec:
         for knob in ("la_block", "ly_block", "batch_block"):
             if getattr(self, knob) < 1:
                 raise ValueError(f"{knob} must be >= 1, got {getattr(self, knob)}")
+        if self.deadline_s is not None and not self.deadline_s > 0:
+            raise ValueError(f"deadline_s must be > 0, got {self.deadline_s}")
 
     def resolve(self, n_rows: int) -> int:
         """Absolute support threshold for a database of ``n_rows`` rows.

@@ -1,0 +1,189 @@
+"""Admission control + QoS: bounded queues, typed errors, deadlines,
+priorities, and the stats() operator surface.
+
+Anchors: a full queue rejects with ``Overloaded`` immediately (never
+buffers), byte budgets count in-flight work, shedding is strictly
+oldest-deadline-first and only in favor of later deadlines, expired
+requests resolve with ``DeadlineExceeded`` before device work, priority
+reorders group service, and every counter the ISSUE names is visible
+through ``MiningService.stats()``.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.synth import random_db
+from repro.mining import MineSpec, MiningEngine
+from repro.mining.service import MiningService
+from repro.mining.service.admission import (
+    AdmissionQueue, DeadlineExceeded, Overloaded, ServiceClosed,
+)
+
+SPEC = MineSpec(algorithm="hprepost", max_k=4, candidate_unit=8, min_sup=0.3,
+                nlist_width=16)
+
+
+def _db(seed=0, n_tx=60, n_items=10):
+    return random_db(np.random.default_rng(seed), n_tx, n_items, 6), n_items
+
+
+class _Item:
+    def __init__(self, nbytes=0, deadline_at=None):
+        self.nbytes = nbytes
+        self.deadline_at = deadline_at
+
+
+# --------------------------------------------------------- AdmissionQueue
+def test_depth_bound_rejects_without_shedding_no_deadlines():
+    q = AdmissionQueue(max_depth=2)
+    assert q.offer(_Item())[0] and q.offer(_Item())[0]
+    admitted, shed = q.offer(_Item())
+    assert not admitted and shed == []
+    assert q.counters == {"admitted": 2, "rejected": 1, "shed": 0}
+    assert q.depth == 2
+
+
+def test_byte_budget_counts_in_flight_until_release():
+    q = AdmissionQueue(max_bytes=100)
+    a = _Item(nbytes=60)
+    assert q.offer(a)[0]
+    assert q.get(0.1) is a  # popped off the queue, still in flight
+    assert not q.offer(_Item(nbytes=60))[0]  # 60 in flight + 60 > 100
+    q.release(a.nbytes)
+    assert q.offer(_Item(nbytes=60))[0]
+
+
+def test_shed_oldest_deadline_first_in_favor_of_later():
+    now = time.monotonic()
+    q = AdmissionQueue(max_depth=2)
+    early = _Item(deadline_at=now + 1.0)
+    late = _Item(deadline_at=now + 5.0)
+    assert q.offer(early)[0] and q.offer(late)[0]
+    # incoming deadline later than the earliest queued -> evict `early`
+    incoming = _Item(deadline_at=now + 9.0)
+    admitted, shed = q.offer(incoming)
+    assert admitted and shed == [early]
+    # incoming with the EARLIEST deadline cannot shed anyone -> rejected
+    admitted, shed = q.offer(_Item(deadline_at=now + 0.5))
+    assert not admitted and shed == []
+    # no-deadline incoming never sheds no-deadline queue, but queued
+    # deadlines are "older" than infinity -> they are sheddable
+    admitted, shed = q.offer(_Item())
+    assert admitted and shed == [late]
+    assert q.counters["shed"] == 2
+
+
+def test_byte_shedding_reclaims_victim_bytes():
+    now = time.monotonic()
+    q = AdmissionQueue(max_bytes=100)
+    victim = _Item(nbytes=80, deadline_at=now + 1.0)
+    assert q.offer(victim)[0]
+    admitted, shed = q.offer(_Item(nbytes=90, deadline_at=now + 9.0))
+    assert admitted and shed == [victim]
+    assert q.bytes_in_flight == 90
+
+
+def test_queue_validates_budgets():
+    with pytest.raises(ValueError):
+        AdmissionQueue(max_depth=0)
+    with pytest.raises(ValueError):
+        AdmissionQueue(max_bytes=0)
+
+
+# -------------------------------------------------------------- MineSpec
+def test_spec_validates_deadline():
+    with pytest.raises(ValueError):
+        MineSpec(min_sup=0.3, deadline_s=0.0)
+    s = MineSpec(min_sup=0.3, deadline_s=2.5, priority=3)
+    assert s.deadline_s == 2.5 and s.priority == 3
+
+
+def test_qos_fields_do_not_perturb_prep_keys():
+    eng = MiningEngine()
+    fe = eng.frontend("hprepost")
+    assert fe._prep_config(SPEC) == fe._prep_config(
+        SPEC.with_(priority=9, deadline_s=60.0)
+    )
+
+
+# --------------------------------------------------------------- service
+def test_service_overload_resolves_future_with_typed_error():
+    rows, n_items = _db(0)
+    # depth 1 + a long batch window: the first submit occupies the queue
+    # until the worker collects it; meanwhile flood past the bound
+    with MiningService(batch_window_s=0.5, max_queue_depth=1) as svc:
+        futs = [svc.submit(rows, n_items, SPEC) for _ in range(6)]
+        done = [f.result() if not f.exception() else f.exception() for f in futs]
+    overloads = [r for r in done if isinstance(r, Overloaded)]
+    served = [r for r in done if not isinstance(r, BaseException)]
+    assert len(served) >= 1 and len(overloads) >= 1
+    assert len(served) + len(overloads) == 6
+    info = svc.stats()["admission"]
+    assert info["rejected"] == len(overloads)
+    assert svc.stats["requests"] == len(served)  # accepted only
+
+
+def test_service_byte_budget_rejects_big_requests():
+    rows, n_items = _db(0)
+    tiny = int(np.asarray(rows).nbytes) - 1
+    with MiningService(max_queue_bytes=tiny) as svc:
+        fut = svc.submit(rows, n_items, SPEC)
+        with pytest.raises(Overloaded) as ei:
+            fut.result(timeout=5)
+        assert ei.value.shed is False
+    assert svc.stats()["counters"]["rejected"] == 1
+
+
+def test_service_deadline_exceeded_before_work():
+    rows, n_items = _db(0)
+    with MiningService(batch_window_s=0.0) as svc:
+        # warm the prep so timing is stable, then submit an already-tight
+        # deadline: it expires during the batch window / queue wait
+        svc.submit(rows, n_items, SPEC).result(timeout=120)
+        fut = svc.submit(rows, n_items, SPEC.with_(deadline_s=1e-6))
+        time.sleep(0.01)
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=30)
+    assert svc.stats()["counters"]["deadline_dropped"] == 1
+
+
+def test_service_priority_orders_groups():
+    rows_a, n_items = _db(0)
+    rows_b, _ = _db(1)
+    with MiningService(batch_window_s=0.25) as svc:
+        futs = [
+            svc.submit(rows_a, n_items, SPEC),  # priority 0
+            svc.submit(rows_b, n_items, SPEC.with_(priority=5)),
+        ]
+        for f in futs:
+            f.result(timeout=300)
+    assert svc.scheduler.stats["priority_reordered"] >= 1
+
+
+def test_priority_order_is_stable_for_equal_priorities():
+    rows_a, n_items = _db(0)
+    rows_b, _ = _db(1)
+    with MiningService(batch_window_s=0.25) as svc:
+        futs = [svc.submit(rows_a, n_items, SPEC), svc.submit(rows_b, n_items, SPEC)]
+        for f in futs:
+            f.result(timeout=300)
+    assert svc.scheduler.stats["priority_reordered"] == 0
+
+
+def test_stats_is_dict_and_callable_with_issue_counters():
+    with MiningService() as svc:
+        assert svc.stats["requests"] == 0  # historical dict surface intact
+        snap = svc.stats()
+    for key in ("admitted", "rejected", "shed", "deadline_dropped",
+                "retries", "respawns"):
+        assert key in snap["counters"], key
+    for section in ("service", "admission", "scheduler", "engine", "streams"):
+        assert section in snap, section
+
+
+def test_submit_after_close_raises_typed_error():
+    svc = MiningService()
+    svc.close()
+    with pytest.raises(ServiceClosed):
+        svc.submit(*_db(0)[0:1], 10, SPEC)

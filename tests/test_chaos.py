@@ -1,0 +1,155 @@
+"""Chaos harness: break every instrumented point and prove the service
+invariant — every accepted Future resolves, with a result or a typed
+error, and nothing the chaos touched corrupts later answers.
+
+Deterministic sections arm one point at a time (enqueue, prep, serve,
+wave launch, snapshot read) and pin down exactly how the failure
+surfaces. The mini-soak arms several points probabilistically with a
+fixed seed, floods the service, and checks (a) total resolution and
+(b) that every successful result is bit-identical to a clean run —
+the long-running version lives in ``benchmarks/chaos_soak.py``
+(``make chaos-smoke``).
+"""
+import numpy as np
+import pytest
+
+from repro.data.synth import random_db
+from repro.fault.failures import ChaosInjector, SimulatedFailure, installed
+from repro.mining import MineSpec, MiningEngine
+from repro.mining.service import MiningService, SnapshotStore
+from repro.mining.service.admission import (
+    DeadlineExceeded, Overloaded, ServiceClosed, ServiceError,
+)
+
+SPEC = MineSpec(algorithm="hprepost", max_k=4, candidate_unit=8, min_sup=0.3,
+                nlist_width=16)
+
+
+def _db(seed=0, n_tx=60, n_items=10):
+    return random_db(np.random.default_rng(seed), n_tx, n_items, 6), n_items
+
+
+def _mine_clean(rows, n_items, spec=SPEC):
+    return MiningEngine().submit(rows, n_items, spec).itemsets
+
+
+# ------------------------------------------------------ one point at a time
+def test_chaos_enqueue_resolves_future_and_service_survives():
+    rows, n_items = _db(0)
+    with MiningService() as svc:
+        with installed(ChaosInjector().arm("service.enqueue")):
+            fut = svc.submit(rows, n_items, SPEC)
+            with pytest.raises(SimulatedFailure):
+                fut.result(timeout=5)
+            # the poisoned request was never admitted; the next one works
+            ok = svc.submit(rows, n_items, SPEC)
+            assert ok.result(timeout=300).itemsets == _mine_clean(rows, n_items)
+    assert svc.stats["requests"] == 1  # only the served one was accepted
+
+
+def test_chaos_serve_crash_restarts_worker_and_fails_only_that_batch():
+    rows, n_items = _db(0)
+    with MiningService(batch_window_s=0.0) as svc:
+        with installed(ChaosInjector().arm("service.serve")):
+            fut = svc.submit(rows, n_items, SPEC)
+            with pytest.raises(SimulatedFailure):
+                fut.result(timeout=30)
+            assert svc.stats["worker_restarts"] == 1
+            res = svc.submit(rows, n_items, SPEC).result(timeout=300)
+    assert res.itemsets == _mine_clean(rows, n_items)
+
+
+def test_chaos_prep_failure_pins_to_its_group_only():
+    rows, n_items = _db(0)
+    with MiningService(batch_window_s=0.0) as svc:
+        with installed(ChaosInjector().arm("service.prep")):
+            fut = svc.submit(rows, n_items, SPEC)
+            with pytest.raises(SimulatedFailure):
+                fut.result(timeout=300)
+            # worker loop did NOT die: the failure belonged to the group
+            assert svc.stats["worker_restarts"] == 0
+            res = svc.submit(rows, n_items, SPEC).result(timeout=300)
+    assert res.itemsets == _mine_clean(rows, n_items)
+
+
+def test_chaos_wave_launch_failure_resolves_future():
+    rows, n_items = _db(0)
+    # min_sup low enough that mining actually reaches a k>2 wave launch
+    spec = SPEC.with_(min_sup=0.15, max_k=5)
+    with MiningService(batch_window_s=0.0) as svc:
+        svc.submit(rows, n_items, spec).result(timeout=300)  # warm: prep cached
+        with installed(ChaosInjector().arm("mine.wave")):
+            fut = svc.submit(rows, n_items, spec)
+            with pytest.raises(SimulatedFailure):
+                fut.result(timeout=300)
+        res = svc.submit(rows, n_items, spec).result(timeout=300)
+    assert res.itemsets == _mine_clean(rows, n_items, spec)
+
+
+def test_chaos_snapshot_read_degrades_to_rebuild(tmp_path):
+    rows, n_items = _db(0)
+    sd = str(tmp_path / "snaps")
+    with MiningService(snapshot_dir=sd) as svc:
+        svc.submit(rows, n_items, SPEC).result(timeout=300)  # build + spill
+    inj = ChaosInjector().arm("snapshot.read", times=10**9)
+    with MiningService(snapshot_dir=sd) as svc:
+        with installed(inj):
+            res = svc.submit(rows, n_items, SPEC).result(timeout=300)
+    # an I/O failure mid-read is a miss, never an error: correct answer,
+    # just not warm-started from the store
+    assert res.itemsets == _mine_clean(rows, n_items)
+    assert inj.fired["snapshot.read"] >= 1
+    assert res.service_stats["prep_source"] == "built"
+
+
+def test_chaos_snapshot_store_get_raises_at_store_level(tmp_path):
+    store = SnapshotStore(str(tmp_path / "s"))
+    with installed(ChaosInjector().arm("snapshot.read")):
+        with pytest.raises(SimulatedFailure):
+            store.get("any-key")
+
+
+def test_typed_errors_share_a_catchable_base():
+    for exc in (Overloaded("x"), DeadlineExceeded("x"), ServiceClosed("x")):
+        assert isinstance(exc, ServiceError)
+
+
+# ------------------------------------------------------------- mini-soak
+def test_chaos_mini_soak_every_accepted_future_resolves():
+    dbs = [_db(0), _db(1)]
+    clean = [_mine_clean(rows, n) for rows, n in dbs]
+
+    inj = ChaosInjector(seed=1234)
+    inj.arm("service.serve", times=0, prob=0.15)
+    inj.arm("service.prep", times=0, prob=0.15)
+    inj.arm("service.enqueue", times=0, prob=0.10)
+    inj.arm("mine.wave", times=0, prob=0.05)
+    with MiningService(batch_window_s=0.01, max_queue_depth=8) as svc:
+        with installed(inj):
+            futs = []
+            for k in range(14):
+                rows, n = dbs[k % len(dbs)]
+                spec = SPEC.with_(priority=k % 3,
+                                  deadline_s=60.0 if k % 4 == 0 else None)
+                futs.append((k, svc.submit(rows, n, spec)))
+        # chaos uninstalled; everything already accepted must still resolve
+        outcomes = []
+        for k, f in futs:
+            exc = f.exception(timeout=600)  # resolution itself is the test
+            outcomes.append((k, exc if exc is not None else f.result()))
+
+    ok = fail = 0
+    for k, out in outcomes:
+        if isinstance(out, BaseException):
+            assert isinstance(out, (ServiceError, SimulatedFailure)), out
+            fail += 1
+        else:
+            assert out.itemsets == clean[k % len(dbs)]  # bit-identical
+            ok += 1
+    assert ok + fail == 14
+    assert ok >= 1  # the seed gives a mixed run, not a total outage
+    assert sum(inj.fired.values()) >= 1
+    # the accounting drained fully: nothing is left in flight
+    snap = svc.stats()
+    assert snap["admission"]["depth"] == 0
+    assert snap["admission"]["bytes_in_flight"] == 0

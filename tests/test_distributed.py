@@ -255,13 +255,23 @@ def test_heartbeat_detects_death_without_query_traffic(tmp_path):
             dm.append(b)
         victim = min(w.wid for w in dm._live())
         dm.kill_worker(victim)
+
+        # the failovers counter bumps at the *start* of the re-place loop
+        # (the monitor holds _op_lock throughout), so wait for the whole
+        # postcondition — detected AND every segment off the victim —
+        # not just the counter, or a slow box observes mid-failover state
+        def settled():
+            with dm._op_lock:
+                return dm.stats["failovers"] >= 1 and all(
+                    m.worker != victim for m in dm._segments.values()
+                )
+
         deadline = time.monotonic() + 30
-        while dm.stats["failovers"] == 0 and time.monotonic() < deadline:
+        while not settled() and time.monotonic() < deadline:
             time.sleep(0.05)
-        assert dm.stats["failovers"] >= 1  # detected with zero queries issued
+        assert settled()  # detected + re-placed with zero queries issued
         assert dm.stats["workers_lost"] == 1
         assert dm.stats["reassign_rebuilds"] == 0
-        assert all(m.worker != victim for m in dm._segments.values())
 
         spec = SPEC.with_(min_sup=0.2)
         res = dm.mine(spec)
@@ -269,3 +279,249 @@ def test_heartbeat_detects_death_without_query_traffic(tmp_path):
         assert res.itemsets == _single_process(batches, n_items, spec).itemsets
     finally:
         dm.close()
+
+
+# ----------------------------------------------- transport hardening (PR 8)
+def test_channel_sockets_are_hardened():
+    import socket
+
+    from repro.mining.distributed.transport import Listener, dial
+
+    lst = Listener()
+    try:
+        peer = dial(lst.address)
+        chan = lst.accept(5)
+        for c in (peer, chan):
+            s = c.sock
+            assert s.getsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY) != 0
+            assert s.getsockopt(socket.SOL_SOCKET, socket.SO_KEEPALIVE) != 0
+        peer.close()
+        chan.close()
+    finally:
+        lst.close()
+
+
+def test_channel_half_open_peer_surfaces_as_typed_error():
+    """A peer that stops responding trips the bounded recv timeout; a
+    peer that dies hard (RST, no clean FIN) surfaces as ConnectionClosed
+    — either way the coordinator gets a typed error, never a hang."""
+    import socket
+    import struct
+
+    from repro.mining.distributed.protocol import ConnectionClosed
+    from repro.mining.distributed.transport import Listener, dial
+
+    lst = Listener()
+    try:
+        peer = dial(lst.address)
+        chan = lst.accept(5)
+        # half-open: the peer exists but never writes
+        with pytest.raises(TimeoutError):
+            chan.recv(0.2)
+        # hard death: RST instead of FIN (SO_LINGER 0 + close), the
+        # kill -9 shape — recv must type it, not crash on raw OSError
+        peer.sock.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                             struct.pack("ii", 1, 0))
+        peer.sock.close()
+        with pytest.raises((ConnectionClosed, TimeoutError)):
+            chan.recv(5)
+        chan.close()
+    finally:
+        lst.close()
+
+
+# ------------------------------------------------- rpc retry / respawn / ckpt
+def test_rpc_timeout_retries_and_skips_stale_reply(tmp_path):
+    """A reply that times out once is retried under a fresh seq; the
+    late duplicate reply of the timed-out send is skipped as a stale
+    frame, so the retry returns the right payload."""
+    from repro.fault.failures import ChaosInjector, installed
+
+    batches, n_items = _batches(21, sizes=(20,))
+    eng = MiningEngine(snapshot_dir=str(tmp_path))
+    dm = eng.distribute(
+        name="retry", n_items=n_items, workers=1, spec=SPEC, stream_spec=SSPEC,
+        rpc_attempts=3, rpc_backoff_s=0.01,
+    )
+    try:
+        dm.append(batches[0])
+        # one injected timeout on the coordinator's next reply recv: the
+        # worker HAS replied (the chaos fires before the socket read), so
+        # the retry must discard that now-stale frame and match its own
+        with installed(ChaosInjector().arm("rpc.recv", exc=TimeoutError)):
+            stats = dm.worker_stats()
+        assert stats[0]["stats"]["preps"] == 1  # correct payload after retry
+        assert dm.stats["rpc_timeouts"] == 1
+        assert dm.stats["rpc_retries"] == 1
+        assert len(dm._live()) == 1  # one timeout never retires the worker
+    finally:
+        dm.close()
+
+
+def test_rpc_retry_exhaustion_fails_over(tmp_path):
+    """Every send timing out exhausts rpc_attempts and surfaces as a
+    WorkerDied -> failover; with no survivors and no budget, typed
+    NoLiveWorkers."""
+    from repro.fault.failures import ChaosInjector, installed
+
+    batches, n_items = _batches(22, sizes=(18, 12))
+    eng = MiningEngine(snapshot_dir=str(tmp_path))
+    dm = eng.distribute(
+        name="exhaust", n_items=n_items, workers=1, spec=SPEC, stream_spec=SSPEC,
+        rpc_attempts=2, rpc_backoff_s=0.01,
+    )
+    try:
+        dm.append(batches[0])
+        inj = ChaosInjector().arm("rpc.recv", times=10**9, exc=TimeoutError)
+        with installed(inj):
+            with pytest.raises(NoLiveWorkers):
+                dm.append(batches[1])
+        assert dm.stats["rpc_timeouts"] >= 2  # both attempts timed out
+        assert dm.stats["rpc_retries"] >= 1
+        assert dm.stats["workers_lost"] == 1  # exhaustion ran the failover
+    finally:
+        dm.close()
+
+
+def test_respawn_restores_pool_and_answers_exactly(tmp_path):
+    """With a restart budget, a killed worker is replaced: the pool
+    recovers to full size, displaced segments migrate onto the fresh
+    worker snapshot-first, and answers stay bit-identical."""
+    batches, n_items = _batches(23, sizes=(26, 15, 19))
+    spec = SPEC.with_(min_sup=0.15)
+    eng = MiningEngine(snapshot_dir=str(tmp_path))
+    dm = eng.distribute(
+        name="respawn", n_items=n_items, workers=2, spec=SPEC, stream_spec=SSPEC,
+        restart_budget=2,
+    )
+    try:
+        for b in batches:
+            dm.append(b)
+        ref = _single_process(batches, n_items, spec)
+        assert dm.mine(spec).itemsets == ref.itemsets
+
+        victim = min(m.worker for m in dm._segments.values())
+        dm.kill_worker(victim)
+        res = dm.mine(spec)  # death detected mid-query -> failover+respawn
+        assert res.itemsets == ref.itemsets
+        assert dm.stats["respawns"] == 1
+        assert dm.stats["reassign_rebuilds"] == 0  # snapshot-only recovery
+        assert len(dm._live()) == 2  # pool is whole again
+        live_ids = {w.wid for w in dm._live()}
+        assert victim not in live_ids
+        # every segment is owned by a live worker, and the fresh worker
+        # actually carries load (migration happened, not just spawn)
+        owners = {m.worker for m in dm._segments.values()}
+        assert owners <= live_ids and max(live_ids) in owners
+
+        # still fully serviceable, including new appends onto the new pool
+        extra = random_db(np.random.default_rng(31), 12, n_items, 6)
+        dm.append(extra)
+        ref2 = _single_process(batches + [extra], n_items, spec)
+        assert dm.mine(spec).itemsets == ref2.itemsets
+    finally:
+        dm.close()
+
+
+def test_respawn_budget_spent_pool_shrinks(tmp_path):
+    batches, n_items = _batches(24, sizes=(20, 14))
+    eng = MiningEngine(snapshot_dir=str(tmp_path))
+    dm = eng.distribute(
+        name="budget", n_items=n_items, workers=2, spec=SPEC, stream_spec=SSPEC,
+        restart_budget=1,
+    )
+    try:
+        for b in batches:
+            dm.append(b)
+        spec = SPEC.with_(min_sup=0.2)
+        ref = _single_process(batches, n_items, spec)
+        for kill in range(2):
+            victim = min(w.wid for w in dm._live())
+            dm.kill_worker(victim)
+            assert dm.mine(spec).itemsets == ref.itemsets
+        assert dm.stats["respawns"] == 1  # second death: budget exhausted
+        assert len(dm._live()) == 1  # now the pool has shrunk for good
+    finally:
+        dm.close()
+
+
+def test_coordinator_checkpoint_replays_identical_database(tmp_path):
+    """Restarting the coordinator from its append-log checkpoint yields
+    the same SegmentedDB — same rank space, row totals, digest, and
+    bit-identical answers — with segments restored from snapshots, and
+    the recorded placement honored."""
+    batches, n_items = _batches(25, sizes=(24, 16, 20))
+    spec = SPEC.with_(min_sup=0.15)
+    snap, ck = str(tmp_path / "snap"), str(tmp_path / "ck")
+
+    eng1 = MiningEngine(snapshot_dir=snap)
+    dm1 = eng1.distribute(
+        name="ck", n_items=n_items, workers=2, spec=SPEC, stream_spec=SSPEC,
+        checkpoint_dir=ck,
+    )
+    empty = np.full((5, 6), -1, np.int32)  # pad-only batch: rows, no segment
+    try:
+        for b in batches:
+            dm1.append(b)
+        dm1.append(empty)
+        ref = dm1.mine(spec)
+        placement1 = {s: m.worker for s, m in dm1._segments.items()}
+        digest1 = dm1._db_digest()
+        n_rows1 = dm1.db.n_rows
+    finally:
+        dm1.close()
+
+    eng2 = MiningEngine(snapshot_dir=snap)
+    dm2 = eng2.distribute(
+        name="ck2", n_items=n_items, workers=2, spec=SPEC, stream_spec=SSPEC,
+        checkpoint_dir=ck,
+    )
+    try:
+        assert dm2.stats["restored_appends"] == len(batches) + 1
+        assert dm2.db.n_rows == n_rows1
+        assert dm2._db_digest() == digest1
+        assert {s: m.worker for s, m in dm2._segments.items()} == placement1
+        res = dm2.mine(spec)
+        assert res.itemsets == ref.itemsets
+        # replay was a restore, not a recompute: every segment came from
+        # the shared snapshot store
+        ws = dm2.worker_stats()
+        assert sum(s["stats"]["seg_snapshot_hits"] for s in ws.values()) == len(batches)
+        assert sum(s["stats"]["seg_prepares"] for s in ws.values()) == 0
+
+        # the restored database keeps checkpointing: append, restart again
+        extra = random_db(np.random.default_rng(41), 11, n_items, 6)
+        dm2.append(extra)
+        ref3 = dm2.mine(spec)
+    finally:
+        dm2.close()
+
+    eng3 = MiningEngine(snapshot_dir=snap)
+    dm3 = eng3.distribute(
+        name="ck3", n_items=n_items, workers=1, spec=SPEC, stream_spec=SSPEC,
+        checkpoint_dir=ck,
+    )
+    try:
+        assert dm3.mine(spec).itemsets == ref3.itemsets
+    finally:
+        dm3.close()
+
+
+def test_checkpoint_rejects_mismatched_n_items(tmp_path):
+    batches, n_items = _batches(26, sizes=(15,))
+    ck = str(tmp_path / "ck")
+    eng = MiningEngine()
+    dm = eng.distribute(
+        name="ckbad", n_items=n_items, workers=1, spec=SPEC, stream_spec=SSPEC,
+        checkpoint_dir=ck,
+    )
+    try:
+        dm.append(batches[0])
+    finally:
+        dm.close()
+    eng2 = MiningEngine()
+    with pytest.raises(ValueError, match="n_items"):
+        eng2.distribute(
+            name="ckbad2", n_items=n_items + 1, workers=1, spec=SPEC,
+            stream_spec=SSPEC, checkpoint_dir=ck,
+        )

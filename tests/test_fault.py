@@ -1,0 +1,150 @@
+"""repro.fault.failures: the injector/monitor/supervisor primitives.
+
+Previously untested satellite coverage: StragglerMonitor's EWMA flagging
+(and baseline hygiene), run_with_restarts' checkpoint-resume + bounded
+retry exhaustion, FailureInjector's deterministic fail_at_steps firing
+exactly once, and the PR 8 ChaosInjector (deterministic countdowns,
+seeded probabilistic firing, global install/fire plumbing).
+"""
+import pytest
+
+from repro.fault.failures import (
+    ChaosInjector, FailureInjector, SimulatedFailure, StragglerMonitor,
+    fire, installed, run_with_restarts,
+)
+
+
+# ------------------------------------------------------ FailureInjector
+def test_fail_at_steps_fires_exactly_once_per_step():
+    inj = FailureInjector(fail_at_steps=(3, 5))
+    fired = []
+    for step in range(8):
+        try:
+            inj.maybe_fail(step)
+        except SimulatedFailure:
+            fired.append(step)
+    assert fired == [3, 5]
+    # a restarted loop revisiting the same steps does not re-fire them
+    for step in range(8):
+        inj.maybe_fail(step)
+
+
+def test_fail_prob_is_seed_deterministic():
+    def schedule():
+        inj = FailureInjector(fail_prob=0.2, seed=7)
+        return [s for s in range(200) if _fails(inj, s)]
+
+    a, b = schedule(), schedule()
+    assert a == b
+    assert 10 < len(a) < 90  # ~20% of 200, loose bounds
+
+
+def _fails(inj, step):
+    try:
+        inj.maybe_fail(step)
+        return False
+    except SimulatedFailure:
+        return True
+
+
+# ----------------------------------------------------- StragglerMonitor
+def test_straggler_flagging_and_ewma_baseline():
+    mon = StragglerMonitor(threshold=3.0, ewma=0.5)
+    assert mon.record(0, 1.0) is False  # first sample seeds the mean
+    assert mon.record(1, 1.0) is False
+    assert mon.record(2, 10.0) is True  # 10 > 3 * ~1.0
+    # the straggler must NOT have contaminated the baseline: another
+    # normal step is still unflagged and the mean stayed near 1.0
+    assert mon.flagged == [2]
+    assert mon.record(3, 1.2) is False
+    assert mon.mean == pytest.approx(1.0, abs=0.3)
+
+
+def test_straggler_ewma_tracks_drift():
+    mon = StragglerMonitor(threshold=3.0, ewma=0.5)
+    for step, dt in enumerate([1.0, 2.0, 2.5, 2.8, 2.9]):
+        mon.record(step, dt)  # gradual slowdown: never flagged
+    assert mon.flagged == []
+    assert mon.mean > 2.0  # baseline followed the drift
+
+
+# ----------------------------------------------------- run_with_restarts
+def test_run_with_restarts_resumes_from_latest_checkpoint():
+    state = {"ckpt": None, "starts": []}
+
+    def run(start):
+        state["starts"].append(start)
+        for step in range(start, 10):
+            if step == 4 and len(state["starts"]) == 1:
+                raise SimulatedFailure("die once at step 4")
+            state["ckpt"] = step
+        return 9
+
+    assert run_with_restarts(run, lambda: state["ckpt"], max_restarts=2) == 9
+    assert state["starts"] == [0, 4]  # resumed after the last checkpoint
+
+
+def test_run_with_restarts_exhausts_budget():
+    calls = {"n": 0}
+
+    def run(start):
+        calls["n"] += 1
+        raise SimulatedFailure("always")
+
+    with pytest.raises(SimulatedFailure):
+        run_with_restarts(run, lambda: None, max_restarts=3)
+    assert calls["n"] == 4  # the initial attempt + 3 restarts
+
+
+# -------------------------------------------------------- ChaosInjector
+def test_chaos_deterministic_after_and_times():
+    inj = ChaosInjector().arm("p", after=2, times=2)
+    hits = []
+    for i in range(6):
+        try:
+            inj.fire("p")
+            hits.append(False)
+        except SimulatedFailure:
+            hits.append(True)
+    assert hits == [False, False, True, True, False, False]
+    assert inj.seen["p"] == 6 and inj.fired["p"] == 2
+
+
+def test_chaos_custom_exception_type():
+    inj = ChaosInjector().arm("rpc.recv", exc=TimeoutError)
+    with pytest.raises(TimeoutError):
+        inj.fire("rpc.recv")
+
+
+def test_chaos_global_fire_is_noop_unless_installed():
+    fire("not.installed.anywhere")  # must not raise
+    inj = ChaosInjector().arm("x")
+    with installed(inj):
+        with pytest.raises(SimulatedFailure):
+            fire("x")
+    fire("x")  # uninstalled again on exit
+    assert inj.fired["x"] == 1
+
+
+def test_chaos_unarmed_points_pass_through():
+    inj = ChaosInjector().arm("only.this")
+    inj.fire("something.else")
+    assert inj.seen["something.else"] == 1
+    assert inj.fired["something.else"] == 0
+
+
+def test_chaos_prob_is_seed_deterministic():
+    def schedule():
+        inj = ChaosInjector(seed=11).arm("p", times=0, prob=0.3)
+        out = []
+        for _ in range(100):
+            try:
+                inj.fire("p")
+                out.append(0)
+            except SimulatedFailure:
+                out.append(1)
+        return out
+
+    a, b = schedule(), schedule()
+    assert a == b
+    assert 10 < sum(a) < 60

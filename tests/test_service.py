@@ -227,3 +227,53 @@ def test_service_threaded_producers_all_resolve():
             assert f.result(timeout=120).itemsets == fresh.submit(
                 rows, n_items, SPEC.with_(min_sup=s)
             ).itemsets
+
+
+# ------------------------------------------------------ close() (PR 8 fix)
+def test_close_drains_queued_requests_to_results():
+    """Requests still queued when close() is called must resolve with
+    their results — the pre-hardening close joined the worker without
+    draining, orphaning whatever sat in the queue."""
+    rows, n_items = _db(14)
+    svc = MiningService(batch_window_s=0.2)
+    futs = [svc.submit(rows, n_items, SPEC.with_(min_sup=s))
+            for s in (0.4, 0.3, 0.25)]
+    svc.close()  # default drain=True
+    fresh = MiningEngine()
+    for s, f in zip((0.4, 0.3, 0.25), futs):
+        assert f.result(timeout=120).itemsets == fresh.submit(
+            rows, n_items, SPEC.with_(min_sup=s)
+        ).itemsets
+
+
+def test_close_without_drain_fails_queued_fast():
+    from repro.mining.service import ServiceClosed
+
+    rows, n_items = _db(15)
+    svc = MiningService(batch_window_s=0.0)
+    # gate the scheduler so the first batch provably sits mid-execution
+    # while more requests pile up behind it in the queue
+    gate = threading.Event()
+    orig_run = svc.scheduler.run
+
+    def gated_run(reqs, **kw):
+        gate.wait(60)
+        return orig_run(reqs, **kw)
+
+    svc.scheduler.run = gated_run
+    first = svc.submit(rows, n_items, SPEC)
+    deadline = time.monotonic() + 10
+    while svc._q.depth and time.monotonic() < deadline:
+        time.sleep(0.01)  # worker popped `first`, now blocked at the gate
+    queued = [svc.submit(rows, n_items, SPEC) for _ in range(3)]
+    closer = threading.Thread(target=lambda: svc.close(drain=False))
+    closer.start()
+    # the queued requests fail fast with the typed error — while the
+    # in-flight batch is still executing, not 30s later
+    for f in queued:
+        with pytest.raises(ServiceClosed):
+            f.result(timeout=10)
+    gate.set()  # release the batch; close() can now join the worker
+    closer.join(120)
+    assert not closer.is_alive()
+    assert first.result(timeout=120).itemsets  # the running batch finished
