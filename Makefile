@@ -25,13 +25,23 @@
 #                       sweep, hard-kill one worker, re-mine — fails unless
 #                       the answers are bit-identical and the re-assigned
 #                       segments restored from snapshots without a rebuild
+#   make window-smoke - continuous mining end-to-end: append 5 batches into a
+#                       2-batch sliding window with a standing query watching
+#                       (per-append expiry + MineDiff delivery), verifying the
+#                       windowed answer bit-identical to a one-shot over the
+#                       window's rows and the diff stream replaying from empty
+#                       to the live answer; a second process repeats the run
+#                       and must warm-start every segment from the snapshot
+#                       dir with zero prep stages
 #   make chaos-smoke  - hardened-service soak: a fixed-seed ChaosInjector over
 #                       every service failure point (enqueue/prep/serve/wave/
-#                       snapshot read) plus an overload flood against a tiny
-#                       admission queue — fails unless every accepted Future
-#                       resolves (result or typed error), successes are
-#                       bit-identical to a clean run, and backpressure is
-#                       immediate typed Overloaded
+#                       snapshot read), an overload flood against a tiny
+#                       admission queue, and a continuous-mining round with
+#                       chaos on the expiry/diff points — fails unless every
+#                       accepted Future resolves (result or typed error),
+#                       successes are bit-identical to a clean run,
+#                       backpressure is immediate typed Overloaded, and every
+#                       delivered diff chain replays exactly
 #   make tune-smoke   - kernel autotuner end-to-end: a cold process runs the
 #                       timed block search and persists kernel_plans.json
 #                       next to the snapshot dir; a second process must serve
@@ -47,8 +57,9 @@ SERVE_SNAP := .serve-smoke-snapshots
 STREAM_SNAP := .stream-smoke-snapshots
 DIST_SNAP := .dist-smoke-snapshots
 TUNE_SNAP := .tune-smoke-snapshots
+WINDOW_SNAP := .window-smoke-snapshots
 
-.PHONY: test test-tier1 bench-smoke bench-json bench-gate mine-smoke serve-smoke stream-smoke dist-smoke tune-smoke chaos-smoke
+.PHONY: test test-tier1 bench-smoke bench-json bench-gate mine-smoke serve-smoke stream-smoke dist-smoke tune-smoke window-smoke chaos-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -98,6 +109,16 @@ tune-smoke:
 	$(PY) -m repro.launch.mine --tune --snapshot-dir $(TUNE_SNAP) \
 		--dataset mushroom --scale 0.05 --min-sup 0.3 --max-k 4 --expect-plans warm
 	rm -rf $(TUNE_SNAP)
+
+window-smoke:
+	rm -rf $(WINDOW_SNAP)
+	$(PY) -m repro.launch.mine --append 5 --window 2 --watch \
+		--snapshot-dir $(WINDOW_SNAP) \
+		--dataset mushroom --scale 0.05 --min-sup 0.3 --max-k 4
+	$(PY) -m repro.launch.mine --append 5 --window 2 --watch \
+		--snapshot-dir $(WINDOW_SNAP) \
+		--dataset mushroom --scale 0.05 --min-sup 0.3 --max-k 4 --expect-warm
+	rm -rf $(WINDOW_SNAP)
 
 chaos-smoke:
 	$(PY) -m benchmarks.chaos_soak

@@ -127,6 +127,41 @@ def run(quick: bool = False) -> list[tuple[str, float, str]]:
             f"-> {len(stream.db.segments)} segments, query after "
             f"{t_query_c * 1e6:.0f}us",
         ))
+
+    # --- continuous mining: sliding-window ingest and standing-query diffs
+    S = 8 if quick else 16
+    batches = np.array_split(rows, S)
+    pad = max(len(b) for b in batches)
+    ssw = StreamSpec(row_pad=pad, window_batches=S // 2, max_segments=4 * S)
+
+    engw = MiningEngine()
+    engw.append(batches[0], n_items, spec=spec, stream_spec=ssw)  # warmup jits
+    engw2 = MiningEngine()
+    t0 = _pc()
+    for b in batches:
+        engw2.append(b, n_items, spec=spec, stream_spec=ssw)
+    t_win = _pc() - t0
+    stw = engw2.stream().stats
+    out.append((
+        f"stream_window_append_{S}seg", t_win * 1e6,
+        f"window={S // 2} batches; expired {stw['expired_segments']} segs "
+        f"/{stw['expired_rows']} rows at append time",
+    ))
+
+    engq = MiningEngine()
+    engq.append(batches[0], n_items, spec=spec, stream_spec=ssw)
+    engq.register_standing(spec)  # every append now delivers a MineDiff
+    t0 = _pc()
+    for b in batches[1:]:
+        engq.append(b, n_items, spec=spec, stream_spec=ssw)
+    t_watch = _pc() - t0
+    stq = engq.stream().stats
+    per_diff = stq["diff_latency_s_total"] / max(stq["diffs_delivered"], 1)
+    out.append((
+        f"stream_standing_diff_{S}seg", per_diff * 1e6,
+        f"{stq['diffs_delivered']} diffs in {t_watch * 1e6:.0f}us of appends; "
+        f"seed-pruned {stq['seed_pruned_candidates']} candidates",
+    ))
     return out
 
 

@@ -1,24 +1,36 @@
 """Chaos soak + overload smoke for the hardened MiningService
 (``make chaos-smoke``).
 
-Two checks, both fixed-seed and self-verifying:
+Three checks, all fixed-seed and self-verifying:
 
-  ``soak``     — install a seeded ``ChaosInjector`` over every service
-                 failure point (enqueue, prep, serve, wave launch,
-                 snapshot read) and flood the service with mixed-QoS
-                 requests. PASS iff every accepted Future resolves —
-                 with a result or a typed error — every successful
-                 result is bit-identical to a clean single-engine run,
-                 and the admission accounting drains back to zero.
-  ``overload`` — bound the queue tightly and flood it. PASS iff the
-                 overflow is rejected *immediately* with typed
-                 ``Overloaded`` (never buffered, never hung), everything
-                 else serves exactly, and the counters add up.
+  ``soak``       — install a seeded ``ChaosInjector`` over every service
+                   failure point (enqueue, prep, serve, wave launch,
+                   snapshot read) and flood the service with mixed-QoS
+                   requests. PASS iff every accepted Future resolves —
+                   with a result or a typed error — every successful
+                   result is bit-identical to a clean single-engine run,
+                   and the admission accounting drains back to zero.
+  ``overload``   — bound the queue tightly and flood it. PASS iff the
+                   overflow is rejected *immediately* with typed
+                   ``Overloaded`` (never buffered, never hung), everything
+                   else serves exactly, and the counters add up.
+  ``continuous`` — a sliding-window stream with a standing query, driven
+                   through the service Future lane while chaos hits the
+                   continuous points (``stream.expire``, ``stream.diff``)
+                   plus enqueue. PASS iff every accepted Future resolves,
+                   every delivered diff chain replays from empty to the
+                   exact delivered answer (diffs consistent with a clean
+                   replay), interleaved windowed queries answer
+                   bit-identically to the brute-force oracle over exactly
+                   the retained rows, and after chaos is disarmed one
+                   clean append restores the window invariant (expiry
+                   self-heals).
 
 Usage:
-    PYTHONPATH=src python -m benchmarks.chaos_soak            # both
+    PYTHONPATH=src python -m benchmarks.chaos_soak            # all three
     PYTHONPATH=src python -m benchmarks.chaos_soak soak
     PYTHONPATH=src python -m benchmarks.chaos_soak overload
+    PYTHONPATH=src python -m benchmarks.chaos_soak continuous
 """
 from __future__ import annotations
 
@@ -143,10 +155,106 @@ def overload() -> None:
     print("overload smoke PASS: backpressure is immediate and typed")
 
 
+def continuous() -> None:
+    from repro.core.oracle import mine_bruteforce
+    from repro.mining.continuous import replay_diffs
+    from repro.mining.stream import StreamSpec
+
+    rng = np.random.default_rng(SOAK_SEED)
+    n_items = 12
+    sspec = StreamSpec(row_pad=16, window_rows=120)
+    spec = SPEC.with_(min_sup=0.3)
+    n_appends = 14
+
+    inj = ChaosInjector(seed=SOAK_SEED)
+    inj.arm("stream.expire", times=0, prob=0.3)
+    inj.arm("stream.diff", times=0, prob=0.25)
+    inj.arm("service.enqueue", times=0, prob=0.05)
+
+    t0 = time.perf_counter()
+    with MiningService(batch_window_s=0.01) as svc:
+        svc.engine.stream("cont", n_items=n_items, spec=spec, stream_spec=sspec)
+        qf = svc.register_standing(spec, stream="cont")
+        afuts, qfuts = [], []
+        with installed(inj):
+            for k in range(n_appends):
+                rows = random_db(rng, 20 + int(rng.integers(0, 25)), n_items, 6)
+                afuts.append(svc.append(rows, n_items, stream="cont",
+                                        spec=spec, stream_spec=sspec))
+                if k == 2:
+                    qfuts.append(svc.register_standing(spec, stream="cont"))
+                if k % 4 == 3:
+                    qfuts.append(svc.submit_stream(spec, stream="cont"))
+            # drain the appends INSIDE the chaos window — they execute on
+            # the service worker thread, and the expiry/diff points must be
+            # armed when it reaches them
+            for f in afuts:
+                f.exception(timeout=600)
+            for point in ("stream.expire", "stream.diff", "service.enqueue"):
+                inj.disarm(point)
+            # one clean append after disarm: expiry self-heals whatever
+            # chaos skipped
+            heal = svc.append(random_db(rng, 24, n_items, 6), n_items,
+                              stream="cont")
+        resolved = typed = 0
+        queries = []
+        for f in afuts + qfuts + [qf, heal]:
+            exc = f.exception(timeout=600)  # a hang here is the failure
+            if exc is None:
+                resolved += 1
+                queries.append(f.result())
+            elif isinstance(exc, (ServiceError, SimulatedFailure)):
+                typed += 1
+            else:
+                raise SystemExit(f"untyped error out of the stream lane: {exc!r}")
+        sm = svc.engine.stream("cont")
+    # every delivered diff chain replays from empty to the delivered answer
+    standing = [r for r in queries if hasattr(r, "diffs")]
+    for q in standing:
+        if replay_diffs(q.diffs) != q.latest:
+            raise SystemExit("a diff chain does not replay to its answer")
+    # window invariant after the clean append, and exact windowed answers
+    # segment rows carry PAD tails (row_pad); the real rows lead
+    retained = np.concatenate([s.rows[:s.n_rows] for s in sm.db.segments])
+    if len(retained) != sm.db.n_rows:
+        raise SystemExit("segment rows disagree with db.n_rows")
+    # minimal suffix: dropping the oldest retained segment must land below
+    # the window (otherwise a clean expiry pass would have dropped it)
+    if len(sm.db.segments) > 1 \
+            and sm.db.n_rows - sm.db.segments[0].n_rows >= sspec.window_rows:
+        raise SystemExit(
+            f"window did not self-heal: {sm.db.n_rows} rows retained"
+        )
+    final = sm.mine(spec)
+    oracle = mine_bruteforce(retained, n_items, final.min_count, max_k=spec.max_k)
+    if final.itemsets != oracle:
+        raise SystemExit("windowed mine diverged from the oracle under chaos")
+    for q in standing:
+        if q.latest != replay_diffs(q.diffs):
+            raise SystemExit("standing answer inconsistent with replay")
+    for r in queries:
+        if hasattr(r, "itemsets") and r.n_rows == final.n_rows \
+                and r.itemsets != final.itemsets:
+            raise SystemExit("an interleaved query diverged at equal coverage")
+    if inj.fired["stream.expire"] + inj.fired["stream.diff"] == 0:
+        raise SystemExit("no continuous point ever fired; soak proved nothing")
+    st = sm.stats
+    print(
+        f"continuous soak: {n_appends + 1} appends in {time.perf_counter() - t0:.1f}s"
+        f" -> {resolved} futures resolved, {typed} typed failures, 0 orphans"
+    )
+    print(f"  injected: {dict(inj.fired)}  "
+          f"expires={st['expires']} expire_errors={st['expire_errors']} "
+          f"diffs={st['diffs_delivered']} diff_errors={st['diff_errors']}")
+    print("continuous soak PASS: diffs replay exactly, window self-healed, "
+          "answers bit-identical to the oracle")
+
+
 def main(argv=None) -> None:
-    modes = (argv if argv is not None else sys.argv[1:]) or ["soak", "overload"]
+    modes = (argv if argv is not None else sys.argv[1:]) or [
+        "soak", "overload", "continuous"]
     for m in modes:
-        {"soak": soak, "overload": overload}[m]()
+        {"soak": soak, "overload": overload, "continuous": continuous}[m]()
 
 
 if __name__ == "__main__":

@@ -19,7 +19,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
-BENCH_PR = 7  # this PR's trajectory tag: emit_json writes BENCH_PR<n>.json
+BENCH_PR = 9  # this PR's trajectory tag: emit_json writes BENCH_PR<n>.json
 
 
 def emit_json(path: str | None = None, records=None, pr: int = BENCH_PR) -> str:

@@ -270,14 +270,28 @@ class LocalSegmentExecutor:
         pruning carries the early-stop win instead.
       - ``collect(token)``: block, and return the per-candidate supports
         summed over this executor's segments as an int64 host vector —
-        the paper's reduce step for this partition set.
+        the paper's reduce step for this partition set. With ``weights``
+        the reduce is instead the float64 weighted sum ``Σ w_s · sup_s``
+        (time-decayed supports: the per-segment integer supports stay
+        exact on device; damping happens only in this host reduce).
+      - ``weights``: optional per-segment float weights, or None for the
+        exact integer reduce — the planner reads this attribute to decide
+        integer vs float threshold semantics.
       - ``state_bytes``: footprint of the in-flight merged-N-list states
         after the latest dispatch/collect (peak accounting).
     """
 
-    def __init__(self, miner: "HPrepostMiner", handles: "list[SegmentHandle]"):
+    def __init__(self, miner: "HPrepostMiner", handles: "list[SegmentHandle]",
+                 weights=None):
         self.miner = miner
         self.handles = list(handles)
+        if weights is not None:
+            weights = np.asarray(weights, np.float64)
+            if len(weights) != len(self.handles):
+                raise ValueError(
+                    f"{len(weights)} segment weights for {len(self.handles)} handles"
+                )
+        self.weights = weights
         self._prev: list | None = None
         self.state_bytes = 0
 
@@ -327,7 +341,10 @@ class LocalSegmentExecutor:
 
     def collect(self, parts) -> np.ndarray:
         arrs = jax.device_get(parts)
-        return np.sum(np.stack(arrs, axis=0), axis=0, dtype=np.int64)
+        stacked = np.stack(arrs, axis=0)
+        if self.weights is not None:
+            return np.tensordot(self.weights, stacked.astype(np.float64), axes=1)
+        return np.sum(stacked, axis=0, dtype=np.int64)
 
 
 def _pow2(n: int) -> int:
@@ -950,6 +967,9 @@ class HPrepostMiner:
         max_k: int | None | type(Ellipsis) = ...,
         peak_base: int = 0,
         executor=None,
+        weights=None,
+        seed=None,
+        seed_out=None,
     ) -> PrepostResult:
         """The k>2 wave loop over a *segmented* database (the streaming
         reduce step): candidates are planned once against the global
@@ -974,17 +994,47 @@ class HPrepostMiner:
         processes and sums their support vectors — the planning loop here
         is identical either way, which is what makes the distributed path
         bit-identical by construction.
+
+        ``weights`` (or an executor carrying a ``weights`` attribute)
+        switches the cross-segment reduce to the float64 weighted sum of
+        time-decayed mining: ``supports``/``C``/``min_count`` are then
+        read as float accumulations and emitted supports are floats; the
+        per-segment device path is untouched (integer-exact), only the
+        host reduce and threshold run in float.
+
+        ``seed`` prunes with a standing query's previous waves (exact
+        integer mode only): a dict of per-itemset support *upper bounds*
+        — typically the exact supports the previous refresh collected,
+        inflated by the rows appended since (each new row raises any
+        support by at most 1, and expiry only lowers it). A candidate
+        whose bound misses ``min_count`` is provably infrequent and is
+        dropped before dispatch (``host_pruned_seed``) along with — by
+        anti-monotonicity — the whole subtree it would have opened; a
+        candidate absent from the seed is always kept. The emitted
+        answer is therefore bit-identical to an unseeded mine.
+        ``seed_out``, if a dict, collects the exact reduced support of
+        every candidate this mine settles (frequent or not) — the raw
+        material for the next refresh's seed.
         """
         cfg = self.cfg
         max_k = cfg.max_k if max_k is ... else max_k
         items_arr = np.asarray(items, np.int32)
-        supports = np.asarray(supports, np.int64)
+        if executor is None:
+            executor = LocalSegmentExecutor(self, handles, weights=weights)
+        elif weights is not None:
+            raise ValueError(
+                "pass decay weights through the executor, not alongside one"
+            )
+        weighted = getattr(executor, "weights", None) is not None
+        supports = np.asarray(supports, np.float64 if weighted else np.int64)
+        as_sup = float if weighted else int
         K = len(items_arr)
         stages = self.last_stage_times = {
             "job1_flist": 0.0, "job2_ppc_pack": 0.0, "f2_scan": 0.0,
             "mining_waves": 0.0,
             "planned_candidates": 0.0,
             "host_pruned_parent": 0.0, "host_pruned_subset": 0.0,
+            "host_pruned_seed": 0.0,
         }
         itemsets: dict[tuple[int, ...], int] = {}
         freq = supports >= min_count
@@ -995,12 +1045,21 @@ class HPrepostMiner:
         order = np.lexsort((f_items, -f_sups))
         flist_items = f_items[order]
         for it, s in zip(flist_items.tolist(), f_sups[order].tolist()):
-            itemsets[(int(it),)] = int(s)
+            itemsets[(int(it),)] = as_sup(s)
         peak = int(peak_base)
-        if executor is None:
-            executor = LocalSegmentExecutor(self, handles)
         if K == 0 or max_k == 1 or not itemsets or executor.n_segments == 0:
             return PrepostResult(itemsets, flist_items, len(itemsets), len(itemsets), peak)
+
+        seed_keep = None
+        if seed is not None and not weighted:
+
+            def seed_keep(ranks_):
+                cand = np.sort(items_arr[ranks_], axis=1)
+                return np.fromiter(
+                    (seed.get(tuple(t), min_count) >= min_count
+                     for t in cand.tolist()),
+                    bool, len(cand),
+                )
 
         pair_ok = (C + C.T) >= min_count
         pair_packed = np.packbits(pair_ok, axis=1)
@@ -1017,6 +1076,11 @@ class HPrepostMiner:
 
         t0 = time.perf_counter()
         while len(ranks) or pending is not None:
+            if seed_keep is not None and len(ranks):
+                km = seed_keep(ranks)
+                if not km.all():
+                    stages["host_pruned_seed"] += float((~km).sum())
+                    ranks, parents, qarr = ranks[km], parents[km], qarr[km]
             dispatched = None
             if len(ranks) and (max_k is None or level <= max_k) and len(itemsets) < cfg.max_itemsets:
                 parent_arr, base_idx, q_idx, slot_of, Cpad, wave_fn = self._pack_wave(
@@ -1047,10 +1111,17 @@ class HPrepostMiner:
                 peak = max(peak, int(executor.state_bytes))
                 svals = host[p_slots]
                 keep = svals >= min_count
+                if seed_out is not None and len(p_ranks):
+                    # exact settled supports of EVERY candidate (dead ones
+                    # included — near-frontier corpses are what the next
+                    # refresh's seed prunes)
+                    all_items = np.sort(items_arr[p_ranks], axis=1)
+                    for t, s in zip(all_items.tolist(), svals.tolist()):
+                        seed_out[tuple(t)] = as_sup(s)
                 if keep.any():
                     emit_items = np.sort(items_arr[p_ranks[keep]], axis=1)
                     for t, s in zip(emit_items.tolist(), svals[keep].tolist()):
-                        itemsets[tuple(t)] = int(s)
+                        itemsets[tuple(t)] = as_sup(s)
                 surv_mask = np.zeros(host.shape[0], bool)
                 surv_mask[p_slots[keep]] = True
                 surv_ranks, surv_slots = p_ranks[keep], p_slots[keep]

@@ -8,7 +8,12 @@ host heartbeat loss) arrive from the platform; here they are modeled so the
     (raises ``SimulatedFailure`` mid-loop) — the training-loop shape.
   - ``ChaosInjector``: the same idea generalized from *steps* to *named
     failure points* threaded through the mining stack (service enqueue,
-    prep, wave launch, RPC send/recv, snapshot read). Production code
+    prep, wave launch, RPC send/recv, snapshot read, and the continuous
+    lane: ``stream.expire`` fires before a sliding-window expiry pass —
+    a hit skips the pass, the window self-heals next append — and
+    ``stream.diff`` fires before each standing-query refresh — a hit
+    leaves that query's delivered state untouched so its diff chain
+    stays replayable). Production code
     calls ``fire(point)`` — a no-op until a test/soak ``install``s an
     injector — and the injector decides, deterministically (nth hit) or
     probabilistically (seeded), whether that hit dies and with what

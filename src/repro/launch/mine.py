@@ -221,18 +221,44 @@ def _append(args, rows, n_items: int, name: str, spec: MineSpec, mesh):
     """Streaming path: split the dataset into ``--append`` batches, ingest
     them through the engine's stream, serve the sweep from the live
     SegmentedDB, and (with ``--expect-warm``) verify a replayed process
-    restored every segment from the snapshot store with zero prep."""
+    restored every segment from the snapshot store with zero prep.
+
+    ``--window W`` turns the stream into a sliding window over the last W
+    batches (older segments expire at append time) and verifies the
+    windowed answer bit-identical to a one-shot mine over exactly the
+    window's rows. ``--watch`` registers a standing query up front and
+    prints the ``MineDiff`` each append delivers; at the end the diff
+    stream replayed from empty must equal the final answer."""
     import numpy as np
 
     engine = MiningEngine(mesh, snapshot_dir=args.snapshot_dir)
+    sspec = None
+    if args.window:
+        from repro.mining.stream import StreamSpec
+
+        sspec = StreamSpec(window_batches=args.window)
+    watch = None
+    if args.watch:
+        engine.stream(n_items=n_items, spec=spec, stream_spec=sspec)
+        watch = engine.register_standing(spec)
+        print(f"  watch: standing query registered "
+              f"({watch.diffs[-1].total} itemsets at register)")
     batches = np.array_split(rows, args.append)
     for i, batch in enumerate(batches):
-        st = engine.append(batch, n_items, spec=spec)
-        print(
+        st = engine.append(batch, n_items, spec=spec, stream_spec=sspec)
+        line = (
             f"  append[{i}]: +{st['rows']} rows -> {st['segments']} segment(s), "
             f"{st['new_items']} new item(s), prep={st['prep_source']}, "
             f"{st['append_s'] * 1e3:.1f}ms"
         )
+        if args.window:
+            line += f", expired={st['expired']} (-{st['expired_rows']} rows)"
+        print(line)
+        if watch is not None and watch.diffs[-1].cause != "register":
+            d = watch.diffs[-1]
+            print(f"    diff[{d.seq}] {d.cause}: +{len(d.entered)} "
+                  f"-{len(d.left)} ~{len(d.changed)} -> {d.total} itemsets "
+                  f"over {d.n_rows} rows ({d.latency_s * 1e3:.1f}ms)")
     fracs = [float(s) for s in args.sweep.split(",")] if args.sweep else [args.min_sup]
     results = []
     for frac in fracs:
@@ -242,11 +268,41 @@ def _append(args, rows, n_items: int, name: str, spec: MineSpec, mesh):
               f"[{res.service_stats['stream_segments']} segments]")
     stream = engine.stream()
     s = stream.stats
-    print(
+    line = (
         f"{name}: {len(rows)} tx streamed as {args.append} batches; "
         f"seg_prepares={s['seg_prepares']} snapshot_hits={s['seg_snapshot_hits']} "
         f"compactions={s['compactions']}"
     )
+    if args.window:
+        line += f" expires={s['expires']} expired_rows={s['expired_rows']}"
+    print(line)
+    if args.window:
+        # the windowed answer must be bit-identical to a one-shot mine over
+        # exactly the window's rows (the continuous-mining anchor)
+        wrows = np.concatenate(batches[-args.window:])
+        ref = engine.submit(wrows, n_items, spec)
+        live = engine.submit_stream(spec)
+        if live.n_rows != len(wrows) or live.itemsets != ref.itemsets:
+            raise SystemExit(
+                f"windowed mine diverged from the one-shot over the window: "
+                f"{len(live.itemsets)} itemsets over {live.n_rows} rows vs "
+                f"{len(ref.itemsets)} over {len(wrows)}"
+            )
+        print(f"window parity verified: last {args.window} batches "
+              f"({len(wrows)} rows), {len(live.itemsets)} itemsets bit-identical")
+    if watch is not None:
+        from repro.mining.continuous import replay_diffs
+
+        final = engine.submit_stream(spec)
+        replayed = replay_diffs(watch.diffs)
+        if replayed != watch.latest or replayed != final.itemsets:
+            raise SystemExit(
+                f"standing diff stream does not replay to the live answer: "
+                f"{len(replayed)} vs {len(final.itemsets)} itemsets"
+            )
+        print(f"watch verified: {len(watch.diffs)} diffs replay from empty "
+              f"to the live answer ({len(replayed)} itemsets); "
+              f"seed-pruned {s['seed_pruned_candidates']} candidate(s)")
     if args.expect_warm:
         # every already-seen segment must restore from its snapshot — a
         # single rebuilt segment means the warm start did not hold
@@ -299,6 +355,19 @@ def main(argv=None):
         help="streaming path: split the dataset into N batches, ingest them "
              "one by one (each preps only its own segment), and serve "
              "--sweep/--min-sup from the live segmented database",
+    )
+    ap.add_argument(
+        "--window", type=int, default=0, metavar="W",
+        help="with --append: sliding window — retain only the last W "
+             "batches (older segments expire exactly at append time) and "
+             "verify the windowed answer bit-identical to a one-shot mine "
+             "over the window's rows",
+    )
+    ap.add_argument(
+        "--watch", action="store_true",
+        help="with --append: register a standing query before ingest, print "
+             "the MineDiff each append delivers, and verify the diff stream "
+             "replays from empty to the final live answer",
     )
     ap.add_argument(
         "--workers", type=int, default=0, metavar="W",
@@ -354,6 +423,11 @@ def main(argv=None):
         ap.error("--append and --serve are separate paths; pick one")
     if args.workers and not args.append:
         ap.error("--workers needs --append N (the distributed ingest path)")
+    if (args.window or args.watch) and not args.append:
+        ap.error("--window/--watch need --append N (the streaming path)")
+    if (args.window or args.watch) and args.workers:
+        ap.error("--window/--watch drive the single-process stream; the "
+                 "distributed window rides the coordinator's stream_spec")
     if args.kill_worker and args.workers < 2:
         ap.error("--kill-worker needs --workers >= 2 (someone must survive)")
     if args.respawn and not args.workers:

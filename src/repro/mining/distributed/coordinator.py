@@ -39,6 +39,7 @@ from repro.checkpoint.atomic import (
     fsync_write, replace_file_atomic, save_array, write_dir_atomic,
 )
 from repro.core import encoding as enc
+from repro.fault import failures
 from repro.mining.distributed import placement
 from repro.mining.distributed import protocol as pr
 from repro.mining.distributed.transport import Listener
@@ -88,9 +89,14 @@ class SegmentMeta:
     n_rows_real: int
     local_items: np.ndarray
     worker: int
+    seq: int = 0  # append-order position, shared with empty-batch entries
     nbytes: int = 0
     prep_bytes: int = 0
     digest: str = ""
+    # the worker-reported local F2 block, kept so window expiry can
+    # subtract it from the global C exactly (the retraction half of the
+    # reduce) without a round-trip
+    C_block: np.ndarray | None = None
 
 
 class RemoteSegmentExecutor:
@@ -198,11 +204,24 @@ class DistributedMiner:
         # killed worker stays gone); production serves pass a real budget.
         self.restart_budget = int(restart_budget)
         self.checkpoint_dir = checkpoint_dir
+        if self.stream_spec.decay < 1.0:
+            raise ValueError(
+                "decayed supports are a single-process stream mode; "
+                "distributed databases mine the exact integer path only"
+            )
         self.db = SegmentedDB(n_items)  # global ranks/counts/C/n_rows only
         self._segments: dict[int, SegmentMeta] = {}
         self._next_seg = 0
-        self._empty_rows: list[int] = []  # row counts of empty appends
+        self._append_seq = 0  # append-order clock over segments AND empties
+        # (seq, row count) of segment-less (all-PAD) appends: their rows
+        # joined db.n_rows, so sliding windows must age them out too
+        self._empty_rows: list[list[int]] = []
+        self._expired: set[int] = set()  # window-expired seg ids (log stays)
+        self.rows_appended = 0  # monotone: never decremented by expiry
         self._op_lock = threading.RLock()
+        from repro.mining.continuous import StandingRegistry
+
+        self.standing = StandingRegistry(self)
         self.stats = {
             "appends": 0, "queries": 0, "empty_batches": 0,
             "workers_spawned": int(workers), "workers_lost": 0,
@@ -212,6 +231,12 @@ class DistributedMiner:
             "rpc_timeouts": 0, "rpc_retries": 0,
             "respawns": 0, "respawn_failures": 0,
             "restored_appends": 0, "checkpoint_failures": 0,
+            # sliding-window churn + standing-query delivery telemetry
+            "expires": 0, "expired_segments": 0, "expired_rows": 0,
+            "expire_errors": 0,
+            "standing_queries": 0, "diffs_delivered": 0, "diff_errors": 0,
+            "diff_latency_s_total": 0.0, "last_diff_latency_s": 0.0,
+            "seed_pruned_candidates": 0,
         }
         self._listener = Listener()
         self._workers: dict[int, WorkerHandle] = {}
@@ -526,39 +551,139 @@ class DistributedMiner:
             new_items = self.db.register_batch(hist)
             self.db.n_rows += len(rows)
             self.stats["appends"] += 1
+            self.rows_appended += len(rows)
             source = "empty"
+            worker = -1
+            seq = self._append_seq
+            self._append_seq += 1
             if hist.sum() > 0:
                 local_items = self.db.present_in_order(hist)
                 seg_id = self._next_seg
                 self._next_seg += 1
                 m = SegmentMeta(
                     seg_id=seg_id, rows=rows, n_rows_real=len(rows),
-                    local_items=local_items, worker=-1,
+                    local_items=local_items, worker=-1, seq=seq,
                 )
                 wid, rep = self._place_segment(m)
                 gr = self.db.rank_of[local_items]
-                self.db.C[np.ix_(gr, gr)] += np.asarray(rep["C"], np.int64)
+                m.C_block = np.asarray(rep["C"], np.int64)
+                self.db.C[np.ix_(gr, gr)] += m.C_block
                 m.worker = wid
                 m.nbytes = int(rep["nbytes"])
                 m.prep_bytes = int(rep["prep_bytes"])
                 m.digest = self._padded_digest(rows)
                 self._segments[seg_id] = m
                 source = rep["source"]
+                worker = wid
                 self._checkpoint_append(m)
             else:
                 self.stats["empty_batches"] += 1
-                self._empty_rows.append(len(rows))
+                self._empty_rows.append([seq, len(rows)])
                 self._checkpoint_manifest()
+            n_exp_seg, n_exp_rows = self._expire()
+            diffs = self.standing.refresh_all(
+                "expire" if n_exp_rows else "append"
+            )
             return {
                 "rows": int(len(rows)),
                 "total_rows": int(self.db.n_rows),
                 "segments": len(self._segments),
                 "new_items": int(len(new_items)),
+                "expired": int(n_exp_seg),
+                "expired_rows": int(n_exp_rows),
+                "diffs": int(diffs),
                 "prep_source": source,
-                "worker": int(self._segments[self._next_seg - 1].worker)
-                if source != "empty" else -1,
+                "worker": worker,
                 "append_s": time.perf_counter() - t0,
             }
+
+    def _expire(self) -> "tuple[int, int]":
+        """Sliding-window expiry (lock held): a placement-aware drop over
+        the append-order ledger of segments AND segment-less (all-PAD)
+        appends. Victims are the oldest entries beyond the minimal suffix
+        covering the window; each segment drop subtracts its histogram and
+        recorded F2 block from the global reduce (exact retraction), frees
+        the device copy on its owning worker (best-effort — a dead owner
+        folds into failover), and is recorded in the checkpoint manifest so
+        a restore replays expired batches rank-only; an empty-entry drop
+        just releases its rows from ``db.n_rows``. An injected
+        ``stream.expire`` failure skips the pass; the window self-heals on
+        the next append. Returns (segments expired, rows expired)."""
+        ss = self.stream_spec
+        if not ss.windowed:
+            return 0, 0
+        by_batches = bool(ss.window_batches)
+        # distributed databases never compact: one segment == one batch
+        entries = [
+            (m.seq, 1 if by_batches else m.n_rows_real, m)
+            for m in self._segments.values()
+        ] + [
+            (q, 1 if by_batches else n, None)
+            for q, n in self._empty_rows if n
+        ]
+        entries.sort(key=lambda e: e[0])
+        if len(entries) <= 1:
+            return 0, 0
+        window = ss.window_batches or ss.window_rows
+        total = sum(e[1] for e in entries)
+        victims, i = [], 0
+        while i < len(entries) - 1 and total - entries[i][1] >= window:
+            total -= entries[i][1]
+            victims.append(entries[i])
+            i += 1
+        if not victims:
+            return 0, 0
+        try:
+            failures.fire("stream.expire")
+        except Exception:
+            self.stats["expire_errors"] += 1
+            return 0, 0
+        seg_victims = [e[2] for e in victims if e[2] is not None]
+        by_worker: dict[int, list[int]] = {}
+        for m in seg_victims:
+            del self._segments[m.seg_id]
+            self._expired.add(m.seg_id)
+            gr = self.db.rank_of[m.local_items]
+            self.db.C[np.ix_(gr, gr)] -= m.C_block
+            self.db.counts -= enc.item_support(m.rows, self.n_items)
+            self.db.n_rows -= m.n_rows_real
+            by_worker.setdefault(m.worker, []).append(m.seg_id)
+        empty_seqs = {e[0] for e in victims if e[2] is None}
+        empty_rows = sum(n for q, n in self._empty_rows if q in empty_seqs)
+        if empty_seqs:
+            self._empty_rows = [
+                e for e in self._empty_rows if e[0] not in empty_seqs
+            ]
+            self.db.n_rows -= empty_rows
+        for wid, seg_ids in by_worker.items():
+            w = self._workers.get(wid)
+            if w is None or not w.alive:
+                continue  # its device copies died with it; the log is here
+            try:
+                self._request(w, {"op": "drop", "seg_ids": seg_ids})
+            except WorkerDied as e:
+                try:
+                    self._failover(e.worker_id)
+                except NoLiveWorkers:
+                    pass  # surfaced by the next append/mine
+        n_rows = sum(m.n_rows_real for m in seg_victims) + empty_rows
+        self.stats["expires"] += 1
+        self.stats["expired_segments"] += len(seg_victims)
+        self.stats["expired_rows"] += n_rows
+        self._checkpoint_manifest()
+        return len(seg_victims), n_rows
+
+    # ----------------------------------------------------- standing queries
+    def register(self, spec: MineSpec):
+        """Register a standing query against the distributed database:
+        mined now and re-answered (with a ``MineDiff``) after every
+        append/expiry — same semantics as ``StreamingMiner.register``."""
+        with self._op_lock:
+            return self.standing.register(spec)
+
+    def cancel(self, query) -> None:
+        with self._op_lock:
+            self.standing.cancel(query)
 
     def _place_segment(self, m: SegmentMeta, prefer: int | None = None):
         """Place (prep) one segment on a live worker: ``(wid, reply)``.
@@ -620,11 +745,18 @@ class DistributedMiner:
                 "schema": self.CK_SCHEMA,
                 "n_items": int(self.n_items),
                 "segments": [int(s) for s in sorted(self._segments)],
+                "expired": [int(s) for s in sorted(self._expired)],
                 "placement": {
                     str(s): int(self._segments[s].worker)
                     for s in sorted(self._segments)
                 },
-                "empty_rows": [int(n) for n in self._empty_rows],
+                "seg_seq": {
+                    str(s): int(self._segments[s].seq)
+                    for s in sorted(self._segments)
+                },
+                "empty_rows": [
+                    [int(q), int(n)] for q, n in self._empty_rows
+                ],
             }
             replace_file_atomic(
                 os.path.join(self.checkpoint_dir, "manifest.json"),
@@ -656,21 +788,31 @@ class DistributedMiner:
                 f"this coordinator has n_items={self.n_items}"
             )
         placed = {int(k): int(v) for k, v in manifest.get("placement", {}).items()}
+        seqs = {int(k): int(v) for k, v in manifest.get("seg_seq", {}).items()}
+        expired = {int(s) for s in manifest.get("expired", [])}
+        live = {int(s) for s in manifest.get("segments", [])}
         with self._op_lock:
-            for seg_ref in manifest.get("segments", []):
-                seg_id = int(seg_ref)
+            for seg_id in sorted(live | expired):
                 rows = np.load(os.path.join(self._ck_entry(seg_id), "rows.npy"))
-                self._replay_append(seg_id, rows, prefer=placed.get(seg_id))
+                if seg_id in expired:
+                    self._replay_expired(seg_id, rows)
+                else:
+                    self._replay_append(
+                        seg_id, rows, prefer=placed.get(seg_id),
+                        seq=seqs.get(seg_id),
+                    )
                 self.stats["restored_appends"] += 1
-            for n in manifest.get("empty_rows", []):
-                self.db.n_rows += int(n)
-                self._empty_rows.append(int(n))
+            for entry in manifest.get("empty_rows", []):
+                q, n = int(entry[0]), int(entry[1])
+                self.db.n_rows += n
+                self._empty_rows.append([q, n])
+                self._append_seq = max(self._append_seq, q + 1)
                 self.stats["appends"] += 1
                 self.stats["empty_batches"] += 1
                 self.stats["restored_appends"] += 1
 
     def _replay_append(self, seg_id: int, rows: np.ndarray,
-                       prefer: int | None) -> None:
+                       prefer: int | None, seq: int | None = None) -> None:
         """One checkpointed append, re-registered and re-placed — the body
         of ``append`` minus validation (the original append did it) and
         minus re-checkpointing what is already on disk."""
@@ -678,20 +820,40 @@ class DistributedMiner:
         self.db.register_batch(hist)
         self.db.n_rows += len(rows)
         self.stats["appends"] += 1
+        self.rows_appended += len(rows)
         local_items = self.db.present_in_order(hist)
         self._next_seg = max(self._next_seg, seg_id + 1)
+        if seq is None:
+            seq = self._append_seq
+        self._append_seq = max(self._append_seq, seq + 1)
         m = SegmentMeta(
             seg_id=seg_id, rows=rows, n_rows_real=len(rows),
-            local_items=local_items, worker=-1,
+            local_items=local_items, worker=-1, seq=seq,
         )
         wid, rep = self._place_segment(m, prefer=prefer)
         gr = self.db.rank_of[local_items]
-        self.db.C[np.ix_(gr, gr)] += np.asarray(rep["C"], np.int64)
+        m.C_block = np.asarray(rep["C"], np.int64)
+        self.db.C[np.ix_(gr, gr)] += m.C_block
         m.worker = wid
         m.nbytes = int(rep["nbytes"])
         m.prep_bytes = int(rep["prep_bytes"])
         m.digest = self._padded_digest(rows)
         self._segments[seg_id] = m
+
+    def _replay_expired(self, seg_id: int, rows: np.ndarray) -> None:
+        """One checkpointed append that later expired: replayed rank-only.
+        The original append registered the batch's items (extending the
+        append-only rank space) and its later expiry subtracted the
+        histogram back out — so the replay registers then subtracts,
+        reconstructing identical ranks with net-zero counts, and never
+        places anything on a worker."""
+        hist = enc.item_support(rows, self.n_items)
+        self.db.register_batch(hist)
+        self.db.counts -= hist
+        self.stats["appends"] += 1
+        self.rows_appended += len(rows)
+        self._next_seg = max(self._next_seg, seg_id + 1)
+        self._expired.add(seg_id)
 
     def _padded_digest(self, rows: np.ndarray) -> str:
         pad = self.stream_spec.row_pad
@@ -703,7 +865,8 @@ class DistributedMiner:
         return _digest(rows)[2]
 
     # --------------------------------------------------------------- query
-    def mine(self, spec: MineSpec) -> MineResult:
+    def mine(self, spec: MineSpec, _seed: dict | None = None,
+             _seed_out: dict | None = None) -> MineResult:
         """One exact query: plan centrally, execute waves on the workers,
         sum supports, threshold. A worker death mid-query triggers
         failover and a full replay — planning is deterministic, so the
@@ -725,12 +888,14 @@ class DistributedMiner:
         with self._op_lock:
             while True:
                 try:
-                    return self._mine_once(spec, t0)
+                    return self._mine_once(spec, t0, _seed, _seed_out)
                 except WorkerDied as e:
                     self._failover(e.worker_id)
                     self.stats["query_retries"] += 1
 
-    def _mine_once(self, spec: MineSpec, t0: float) -> MineResult:
+    def _mine_once(self, spec: MineSpec, t0: float,
+                   seed: dict | None = None,
+                   seed_out: dict | None = None) -> MineResult:
         items = np.asarray(self.db.order, np.int32)
         sups = self.db.counts[items] if len(items) else np.zeros(0, np.int64)
         C = self.db.C.copy()
@@ -745,7 +910,7 @@ class DistributedMiner:
         res = qminer.mine_prepared_segments(
             None, items, sups, C, min_count, max_k=spec.max_k,
             peak_base=sum(m.prep_bytes for m in self._segments.values()),
-            executor=executor,
+            executor=executor, seed=seed, seed_out=seed_out,
         )
         executor.finish()
         self.stats["queries"] += 1

@@ -539,6 +539,26 @@ class MiningEngine:
             self.stats["submits"] += 1
         return s.mine(spec)
 
+    def register_standing(self, spec: MineSpec, *, stream: str = "default"):
+        """Register a standing query on the named stream: mined once now,
+        then re-answered with a ``MineDiff`` after every append/expiry.
+        Returns the ``StandingQuery`` handle (``latest``, ``diffs``,
+        ``next_diff() -> Future``). Works on streaming and distributed
+        databases alike."""
+        with self._lock:
+            s = self._streams.get(stream)
+            if s is None:
+                raise KeyError(f"no stream named {stream!r}; engine.append(...) first")
+        return s.register(spec)
+
+    def cancel_standing(self, query, *, stream: str = "default") -> None:
+        """Cancel a standing query returned by ``register_standing``."""
+        with self._lock:
+            s = self._streams.get(stream)
+            if s is None:
+                raise KeyError(f"no stream named {stream!r}")
+        s.cancel(query)
+
     def stream_stats(self) -> dict:
         """Per-stream telemetry snapshot: ``{name: stats_dict}`` for every
         live streaming/distributed database (operator surface — the

@@ -228,6 +228,25 @@ class MiningService:
             lambda: self.engine.submit_stream(spec, stream=stream), spec=spec
         )
 
+    def register_standing(self, spec: MineSpec, *, stream: str = "default") -> Future:
+        """Enqueue a standing-query registration on the named stream; the
+        Future resolves to the ``StandingQuery`` handle (its initial
+        answer already delivered as diff 0). Registration rides the same
+        arrival-order stream lane as ``append``/``submit_stream``, so a
+        query registered after an append observes it — and every
+        subsequent append's diff is delivered before that append's own
+        Future resolves."""
+        return self._submit_stream_op(
+            lambda: self.engine.register_standing(spec, stream=stream), spec=spec
+        )
+
+    def cancel_standing(self, query, *, stream: str = "default") -> Future:
+        """Enqueue a standing-query cancellation (arrival order: diffs
+        already in flight ahead of it still deliver)."""
+        return self._submit_stream_op(
+            lambda: self.engine.cancel_standing(query, stream=stream)
+        )
+
     def distribute(self, name: str = "default", **kw):
         """Create/fetch a distributed database (``engine.distribute``) —
         synchronous, since it spawns worker processes, not a mining op.

@@ -31,6 +31,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.core import encoding as enc
 from repro.core.hprepost import PreparedDB, SegmentHandle
 
 
@@ -47,6 +48,8 @@ class Segment:
     local_items: np.ndarray  # items in this segment's tree, stream order
     item_to_local: np.ndarray  # (n_items,) int32: item -> local rank | -1
     digest: str  # content digest of ``rows`` (snapshot identity)
+    n_batches: int = 1  # appended batches folded in (compaction merges sum)
+    tick: int = 0  # append tick this segment arrived at (decay ages off it)
 
     @property
     def k(self) -> int:
@@ -123,12 +126,41 @@ class SegmentedDB:
         self.C[np.ix_(gr, gr)] += seg.prepared.C
         self.segments.append(seg)
 
-    def replace_segments(self, victim_ids: set[int], merged: Segment) -> None:
+    def drop_segments(self, victim_ids: set[int]) -> "list[Segment]":
+        """The retraction primitive: remove the named segments and
+        subtract their aggregates from the global state — the exact
+        inverse of ``register_batch`` + ``add_segment``, because supports
+        are additive over disjoint partitions. Item ranks are append-only
+        and stay assigned (an item whose every occurrence expired simply
+        reports count 0, i.e. infrequent at any positive threshold), so
+        the stream rank space — and with it every surviving segment's
+        packed layout and snapshot key — is untouched. Returns the
+        dropped segments, oldest first."""
+        dropped = [s for s in self.segments if s.seg_id in victim_ids]
+        if not dropped:
+            return []
+        self.segments = [s for s in self.segments if s.seg_id not in victim_ids]
+        for s in dropped:
+            gr = self.rank_of[s.local_items]
+            self.C[np.ix_(gr, gr)] -= s.prepared.C
+            self.counts -= enc.item_support(s.rows, self.n_items)
+            self.n_rows -= s.n_rows
+        return dropped
+
+    def replace_segments(self, victim_ids: set[int], merged: Segment) -> bool:
         """Swap compacted segments for their merge, preserving order (the
         merge lands at the earliest victim's position). Global counts and
         C are untouched: the merged segment's aggregates equal the sum of
         its parts, which are already folded in — which is also why a
-        compaction pass cannot change any query answer."""
+        compaction pass cannot change any query answer.
+
+        Returns False — and swaps NOTHING — when any victim is no longer
+        live: a sliding window may have expired it while an async merge
+        was in flight, and installing the merge would resurrect retracted
+        rows. The discarded pass wasted only prep work."""
+        live = {s.seg_id for s in self.segments}
+        if not victim_ids <= live:
+            return False
         out, placed = [], False
         for s in self.segments:
             if s.seg_id in victim_ids:
@@ -137,9 +169,8 @@ class SegmentedDB:
                     placed = True
                 continue
             out.append(s)
-        if not placed:  # victims vanished (cannot happen single-flight)
-            out.append(merged)
         self.segments = out
+        return True
 
     def handles(self) -> list[SegmentHandle]:
         """Per-segment wave handles against the *current* global rank
@@ -159,6 +190,7 @@ class SegmentedDB:
         return {
             "segments": len(self.segments),
             "rows": self.n_rows,
+            "batches": sum(s.n_batches for s in self.segments),
             "items_ranked": self.n_ranked,
             "segment_rows": [s.n_rows for s in self.segments],
             "bytes": sum(s.nbytes for s in self.segments),

@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core import encoding as enc
 from repro.core.hprepost import PreparedDB
+from repro.fault import failures
 from repro.mining.engine import MiningEngine
 from repro.mining.result import MineResult
 from repro.mining.spec import MineSpec
@@ -154,15 +155,32 @@ class StreamingMiner:
         self.db = SegmentedDB(n_items)
         self._lock = threading.RLock()
         self._next_seg = 0
+        self._tick = 0  # append ticks (decay ages segments off this)
+        self.rows_appended = 0  # monotone: never decremented by expiry
+        # window ledger for segment-less appends (all-PAD batches): their
+        # rows count toward n_rows and must age out of the window like any
+        # others, ordered by append tick against the segments
+        self._empty_trail: list[list[int]] = []  # [tick, n_rows]
         self._compact_pending: set[int] | None = None
         self._compact_future = None
         self._compact_pool: ThreadPoolExecutor | None = None
+        from repro.mining.continuous import StandingRegistry
+
+        self.standing = StandingRegistry(self)
         self.stats = {
             "appends": 0, "queries": 0, "empty_batches": 0,
             "seg_prepares": 0,  # segment builds that ran real prep stages
             "seg_snapshot_hits": 0, "seg_snapshot_misses": 0,
             "seg_snapshot_spill_failures": 0,
             "compactions": 0, "segments_compacted": 0, "compact_errors": 0,
+            "compact_discarded": 0,  # merges dropped: a victim expired mid-flight
+            # sliding-window churn (ROADMAP item 3 operator surface)
+            "expires": 0, "expired_segments": 0, "expired_rows": 0,
+            "expire_errors": 0,
+            # standing-query delivery telemetry
+            "standing_queries": 0, "diffs_delivered": 0, "diff_errors": 0,
+            "diff_latency_s_total": 0.0, "last_diff_latency_s": 0.0,
+            "seed_pruned_candidates": 0,
         }
 
     # -------------------------------------------------------------- append
@@ -184,22 +202,96 @@ class StreamingMiner:
             new_items = self.db.register_batch(hist)
             self.db.n_rows += len(rows)
             self.stats["appends"] += 1
+            self.rows_appended += len(rows)
+            self._tick += 1  # one decay tick per append: history ages now
             source = "empty"
             if hist.sum() > 0:
                 local_items = self.db.present_in_order(hist)
                 seg, source = self._build_segment(rows, len(rows), hist, local_items)
+                seg.tick = self._tick
                 self.db.add_segment(seg)
             else:
                 self.stats["empty_batches"] += 1
+                if self.stream_spec.windowed and len(rows):
+                    self._empty_trail.append([self._tick, len(rows)])
+            n_seg_expired, n_rows_expired = self._expire()
             self._maybe_compact()
+            diffs = self.standing.refresh_all(
+                "expire" if n_rows_expired else "append")
             return {
                 "rows": int(len(rows)),
                 "total_rows": int(self.db.n_rows),
                 "segments": len(self.db.segments),
                 "new_items": int(len(new_items)),
+                "expired": n_seg_expired,
+                "expired_rows": n_rows_expired,
+                "diffs": int(diffs),
                 "prep_source": source,
                 "append_s": time.perf_counter() - t0,
             }
+
+    def _expire(self) -> tuple[int, int]:
+        """Sliding-window expiry (lock held): drop the oldest appends —
+        segments and segment-less all-PAD batches alike, ordered by their
+        append tick — until the retained suffix is the minimal one still
+        covering the window (``window_rows`` real rows /
+        ``window_batches`` batches). The newest append always survives.
+        Returns (segments dropped, rows dropped). An injected expiry
+        failure (``stream.expire``) skips the pass and is only accounted —
+        the window self-heals on the next append, and every answer in
+        between is still exact over the (briefly wider) retained suffix."""
+        ss = self.stream_spec
+        if not ss.windowed:
+            return 0, 0
+        # (tick, size, segment-or-None, rows) in append order
+        by_batches = bool(ss.window_batches)
+        entries = [
+            (s.tick, s.n_batches if by_batches else s.n_rows, s, s.n_rows)
+            for s in self.db.segments
+        ] + [(t, 1 if by_batches else n, None, n) for t, n in self._empty_trail]
+        entries.sort(key=lambda e: e[0])
+        if len(entries) <= 1:
+            return 0, 0
+        window = ss.window_batches or ss.window_rows
+        total = sum(e[1] for e in entries)
+        victims, i = [], 0
+        while i < len(entries) - 1 and total - entries[i][1] >= window:
+            total -= entries[i][1]
+            victims.append(entries[i])
+            i += 1
+        if not victims:
+            return 0, 0
+        try:
+            failures.fire("stream.expire")
+        except Exception:
+            self.stats["expire_errors"] += 1
+            return 0, 0
+        seg_victims = {e[2].seg_id for e in victims if e[2] is not None}
+        dropped = self.db.drop_segments(seg_victims) if seg_victims else []
+        empty_ticks = {e[0] for e in victims if e[2] is None}
+        empty_rows = sum(n for t, n in self._empty_trail if t in empty_ticks)
+        if empty_ticks:
+            self._empty_trail = [
+                e for e in self._empty_trail if e[0] not in empty_ticks]
+            self.db.n_rows -= empty_rows
+        n_rows = sum(s.n_rows for s in dropped) + empty_rows
+        self.stats["expires"] += 1
+        self.stats["expired_segments"] += len(dropped)
+        self.stats["expired_rows"] += n_rows
+        return len(dropped), n_rows
+
+    # ----------------------------------------------------- standing queries
+    def register(self, spec: MineSpec):
+        """Register a standing query: mined now (the initial delivery) and
+        after every append/expiry from here on. Returns the
+        ``StandingQuery`` whose ``next_diff()`` Futures resolve in
+        arrival order with each delivered ``MineDiff``."""
+        with self._lock:
+            return self.standing.register(spec)
+
+    def cancel(self, query) -> None:
+        with self._lock:
+            self.standing.cancel(query)
 
     def _build_segment(self, rows: np.ndarray, n_rows_real: int,
                        hist: np.ndarray, local_items: np.ndarray) -> tuple[Segment, str]:
@@ -226,10 +318,18 @@ class StreamingMiner:
         )
 
     # --------------------------------------------------------------- query
-    def mine(self, spec: MineSpec) -> MineResult:
+    def mine(self, spec: MineSpec, _seed=None, _seed_out=None) -> MineResult:
         """Serve one query from the live ``SegmentedDB`` (the reduce step
         + cross-segment waves). Prep was paid at append time, so results
-        carry ``prep_shared`` and zeroed prep stage keys."""
+        carry ``prep_shared`` and zeroed prep stage keys.
+
+        With ``StreamSpec.decay < 1`` the query runs the damped-window
+        reduce instead: per-segment supports weighted by age in float64,
+        float threshold post-reduce (``repro.mining.continuous.decay``).
+        ``_seed`` / ``_seed_out`` are the standing-query refresh hooks —
+        per-itemset support bounds from the previous answer's settled
+        waves, passed through to the planner's upper-bound prune (exact
+        integer mode only; never changes the answer)."""
         if spec.algorithm != "hprepost":
             raise ValueError(
                 f"stream queries run on the hprepost backend, got {spec.algorithm!r}"
@@ -244,20 +344,34 @@ class StreamingMiner:
             )
         self._fe._check_patterns(spec)
         t0 = time.perf_counter()
+        decay = self.stream_spec.decay
+        weights = None
         with self._lock:
             self._reap_compaction()
             handles = self.db.handles()
             items = np.asarray(self.db.order, np.int32)
-            sups = self.db.counts[items] if len(items) else np.zeros(0, np.int64)
-            # private copy: concurrent appends fold new batches into C/counts
-            # in place, and the wave loop reads its planning tables many times
-            C = self.db.C.copy()
             n_rows = self.db.n_rows
             n_segs = len(handles)
             seg_digest = self.db.digest()
-            min_count = spec.resolve(max(n_rows, 1))
+            if decay < 1.0:
+                from repro.mining import continuous as cont
+
+                spec.resolve(max(n_rows, 1))  # threshold-shape validation only
+                weights = cont.segment_weights(self.db.segments, self._tick, decay)
+                _, sups, C, wrows = cont.weighted_state(self.db, weights)
+                min_count = cont.resolve_weighted(spec, wrows)
+                peak_floor = max(int(min_count), 1)
+                wrows_snapshot = float(wrows)
+            else:
+                sups = self.db.counts[items] if len(items) else np.zeros(0, np.int64)
+                # private copy: concurrent appends fold new batches into
+                # C/counts in place, and the wave loop reads its planning
+                # tables many times
+                C = self.db.C.copy()
+                min_count = spec.resolve(max(n_rows, 1))
+                peak_floor = min_count
             peak_base = sum(
-                s.prepared.bytes_at(min_count, self.miner.D) for s in self.db.segments
+                s.prepared.bytes_at(peak_floor, self.miner.D) for s in self.db.segments
             )
         if len(items) > spec.max_f1:
             raise ValueError(
@@ -265,7 +379,10 @@ class StreamingMiner:
             )
         qminer = self._fe.miner_for(spec)  # honors execution-only knobs
         res = qminer.mine_prepared_segments(
-            handles, items, sups, C, min_count, max_k=spec.max_k, peak_base=peak_base
+            handles, items, sups, C, min_count, max_k=spec.max_k,
+            peak_base=peak_base, weights=weights,
+            seed=_seed if decay == 1.0 else None,
+            seed_out=_seed_out if decay == 1.0 else None,
         )
         self.stats["queries"] += 1
         out = self._fe._finish(
@@ -276,12 +393,18 @@ class StreamingMiner:
         out.service_stats.update(
             prep_source="stream", stream_segments=n_segs, stream_digest=seg_digest
         )
+        if decay < 1.0:
+            out.service_stats.update(decay=decay, weighted_rows=wrows_snapshot)
         return out
 
     # ---------------------------------------------------------- compaction
     def _needs_compaction(self) -> bool:
         ss = self.stream_spec
         segs = self.db.segments
+        if ss.decay < 1.0:
+            # decayed supports need per-segment ages; a merged segment has
+            # none — the spec validated the triggers are compatible
+            return False
         if len(segs) < 2:
             return False
         if len(segs) > ss.max_segments:
@@ -312,6 +435,11 @@ class StreamingMiner:
         auto trigger (which swallows failures — appends must not break on
         a background merge), an explicit pass propagates a sync failure to
         its caller."""
+        if self.stream_spec.decay < 1.0:
+            raise ValueError(
+                "decayed streams do not compact: a merged segment has no "
+                "single age for the damping weight"
+            )
         with self._lock:
             self._reap_compaction()
             if self._compact_pending is None and len(self.db.segments) >= 2:
@@ -323,10 +451,22 @@ class StreamingMiner:
                     "compactions": self.stats["compactions"]}
 
     def _launch_compaction(self) -> None:  # lock held
-        victims = sorted(self.db.segments, key=lambda s: (s.n_rows, s.seg_id))
-        victims = victims[: min(self.stream_spec.compact_fanin, len(victims))]
-        if len(victims) < 2:
+        segs = self.db.segments
+        fanin = min(self.stream_spec.compact_fanin, len(segs))
+        if fanin < 2:
             return
+        if self.stream_spec.windowed:
+            # expiry is segment-granular off the append-order prefix: a
+            # merge of non-adjacent segments would fuse rows of different
+            # ages and break the window boundary — victims must be a
+            # contiguous run (the lightest one)
+            start = min(
+                range(len(segs) - fanin + 1),
+                key=lambda i: sum(s.n_rows for s in segs[i:i + fanin]),
+            )
+            victims = list(segs[start:start + fanin])
+        else:
+            victims = sorted(segs, key=lambda s: (s.n_rows, s.seg_id))[:fanin]
         self._compact_pending = {v.seg_id for v in victims}
         if self.stream_spec.compact_async:
             if self._compact_pool is None:
@@ -365,10 +505,16 @@ class StreamingMiner:
                 local_items = self.db.present_in_order(hist)
             merged, _ = self._build_segment(rows, sum(v.n_rows for v in victims),
                                             hist, local_items)
+            merged.n_batches = sum(v.n_batches for v in victims)
+            merged.tick = max(v.tick for v in victims)
             with self._lock:
-                self.db.replace_segments({v.seg_id for v in victims}, merged)
-                self.stats["compactions"] += 1
-                self.stats["segments_compacted"] += len(victims)
+                if self.db.replace_segments({v.seg_id for v in victims}, merged):
+                    self.stats["compactions"] += 1
+                    self.stats["segments_compacted"] += len(victims)
+                else:
+                    # a victim expired while the merge was in flight;
+                    # installing it would resurrect retracted rows
+                    self.stats["compact_discarded"] += 1
                 self._compact_pending = None
                 self._compact_future = None
         except BaseException:

@@ -1,0 +1,502 @@
+"""Continuous mining (repro.mining.continuous): sliding windows, decayed
+supports, and standing queries over the segmented database.
+
+Anchors, per the PR acceptance criteria:
+  - retraction: ``SegmentedDB.drop_segments`` subtracts a segment's
+    histogram and F2 block exactly — counts/C/n_rows match a database
+    that never saw the dropped batch (ranks stay append-only);
+  - windowed parity: every windowed mine is bit-identical to a one-shot
+    mine (and the brute-force oracle) over exactly the window's rows —
+    across thresholds, PAD-heavy batches, the paper's Table 1 database,
+    single-process and distributed, and through checkpoint restore;
+  - decay: the time-decayed mode matches a float64 damped-window Apriori
+    oracle exactly (dyadic decay weights make float equality exact);
+  - standing queries: every append/expiry delivers a ``MineDiff``, and
+    the diff stream replayed from empty reconstructs the delivered
+    answer exactly — including under chaos on the expiry/diff points
+    and with settled-wave seed pruning engaged;
+  - telemetry: expiry counts and diff latency ride ``stats()``.
+"""
+import numpy as np
+import pytest
+
+from repro.core.encoding import PAD, pad_transactions
+from repro.core.oracle import mine_bruteforce
+from repro.data.synth import random_db
+from repro.mining import MineSpec, MiningEngine
+from repro.mining.continuous import damped_oracle, replay_diffs
+from repro.mining.stream import StreamSpec
+from repro.mining.stream.segmented import SegmentedDB
+
+SPEC = MineSpec(algorithm="hprepost", max_k=4, candidate_unit=8, min_sup=0.3)
+
+
+def _batches(seed=0, sizes=(30, 14, 22), n_items=10, max_len=6):
+    rng = np.random.default_rng(seed)
+    return [random_db(rng, n, n_items, max_len) for n in sizes], n_items
+
+
+def _windowed_engine(batches, n_items, stream_spec, spec=SPEC):
+    eng = MiningEngine()
+    reports = [eng.append(b, n_items, spec=spec, stream_spec=stream_spec)
+               for b in batches]
+    return eng, reports
+
+
+def _retained_rows(eng, stream="default"):
+    db = eng.stream(stream).db
+    return np.concatenate([s.rows[:s.n_rows] for s in db.segments])
+
+
+# -------------------------------------------------- StreamSpec validation
+def test_stream_spec_rejects_contradictory_compaction_knobs():
+    # fanin larger than the segment cap could never fire a full pass
+    with pytest.raises(ValueError, match="compact_fanin"):
+        StreamSpec(max_segments=4, compact_fanin=8)
+    StreamSpec(max_segments=8, compact_fanin=8)  # boundary is legal
+
+
+def test_stream_spec_validates_continuous_knobs():
+    with pytest.raises(ValueError, match="window_rows"):
+        StreamSpec(window_rows=-1)
+    with pytest.raises(ValueError, match="at most one"):
+        StreamSpec(window_rows=100, window_batches=4)
+    with pytest.raises(ValueError, match="decay"):
+        StreamSpec(decay=0.0)
+    with pytest.raises(ValueError, match="decay"):
+        StreamSpec(decay=1.5)
+    with pytest.raises(ValueError, match="decay"):
+        StreamSpec(decay=0.5, small_rows=64)  # decayed streams never compact
+    assert StreamSpec(window_rows=100).windowed
+    assert StreamSpec(window_batches=3).windowed
+    assert not StreamSpec().windowed
+
+
+# ------------------------------------------------------ retraction primitive
+def test_drop_segments_is_exact_retraction():
+    batches, n_items = _batches(3, sizes=(20, 15, 25))
+    eng, _ = _windowed_engine(batches, n_items, StreamSpec(max_segments=99))
+    db = eng.stream().db
+    victim = db.segments[0].seg_id
+    dropped = db.drop_segments({victim})
+    assert [s.seg_id for s in dropped] == [victim]
+    # counts/C/n_rows equal a database that never saw batch 0 (the rank
+    # space differs only by zero-count rows, which mining ignores)
+    eng2, _ = _windowed_engine(batches[1:], n_items, StreamSpec(max_segments=99))
+    db2 = eng2.stream().db
+    assert db.n_rows == db2.n_rows
+    rest = np.concatenate(batches[1:])
+    res = eng.submit_stream(SPEC)
+    assert res.itemsets == mine_bruteforce(rest, n_items, res.min_count, max_k=4)
+    assert res.itemsets == eng2.submit_stream(SPEC).itemsets
+    assert db.drop_segments({victim}) == []  # already gone: a no-op
+
+
+def test_replace_segments_refuses_expired_victims():
+    batches, n_items = _batches(4, sizes=(18, 12, 16))
+    eng, _ = _windowed_engine(batches, n_items, StreamSpec(max_segments=99))
+    db = eng.stream().db
+    a, b = db.segments[0], db.segments[1]
+    merged_src = [s for s in db.segments]
+    db.drop_segments({a.seg_id})
+    before = (db.n_rows, db.counts.copy(), len(db.segments))
+    # a compaction merge planned before the expiry must be discarded
+    assert db.replace_segments({a.seg_id, b.seg_id}, merged_src[2]) is False
+    assert db.n_rows == before[0] and len(db.segments) == before[2]
+    np.testing.assert_array_equal(db.counts, before[1])
+
+
+# ---------------------------------------------------------- windowed parity
+@pytest.mark.parametrize("min_sup", [0.5, 0.3, 0.15])
+def test_window_rows_parity_across_thresholds(min_sup):
+    batches, n_items = _batches(5, sizes=(25, 18, 31, 12, 20))
+    ss = StreamSpec(window_rows=40)
+    eng, reports = _windowed_engine(batches, n_items, ss)
+    assert any(r["expired"] for r in reports)
+    retained = _retained_rows(eng)
+    spec = SPEC.with_(min_sup=min_sup)
+    res = eng.submit_stream(spec)
+    assert res.n_rows == len(retained)
+    oneshot = MiningEngine().submit(retained, n_items, spec)
+    oracle = mine_bruteforce(retained, n_items, res.min_count, max_k=4)
+    assert res.itemsets == oneshot.itemsets == oracle
+    # the window is the minimal suffix: dropping the oldest retained
+    # segment would land under window_rows
+    db = eng.stream().db
+    assert db.n_rows - db.segments[0].n_rows < ss.window_rows
+
+
+def test_window_batches_parity_and_telemetry():
+    batches, n_items = _batches(6, sizes=(25, 18, 31, 12))
+    eng, reports = _windowed_engine(batches, n_items, StreamSpec(window_batches=2))
+    assert [r["expired"] for r in reports] == [0, 0, 1, 1]
+    retained = np.concatenate(batches[-2:])
+    res = eng.submit_stream(SPEC)
+    assert res.n_rows == len(retained)
+    assert res.itemsets == mine_bruteforce(retained, n_items, res.min_count, max_k=4)
+    st = eng.stream_stats()["default"]
+    assert st["expires"] == 2 and st["expired_segments"] == 2
+    assert st["expired_rows"] == len(batches[0]) + len(batches[1])
+
+
+def test_window_parity_pad_heavy_batches():
+    from repro.core.encoding import pad_transactions
+
+    b1 = pad_transactions([[0], [1, 2], [], [0, 2]], max_len=8)
+    b2 = pad_transactions([[2], [], [], [0, 1, 2]], max_len=8)
+    b3 = np.full((3, 8), -1, np.int32)  # all-PAD rows still count and expire
+    b4 = pad_transactions([[0, 1], [1, 2], [0]], max_len=8)
+    eng = MiningEngine()
+    ss = StreamSpec(window_rows=7)
+    reports = [eng.append(b, 3, spec=SPEC, stream_spec=ss)
+               for b in (b1, b2, b3, b4)]
+    # the all-PAD batch made no segment but its rows joined the window:
+    # b1's segment expired (b2+b3+b4 = 10 rows is the minimal suffix)
+    assert [r["expired_rows"] for r in reports] == [0, 0, 4, 0]
+    res = eng.submit_stream(SPEC.with_(min_sup=0.2))
+    assert res.n_rows == len(b2) + len(b3) + len(b4) == 10
+    oracle_rows = np.concatenate([b2, b3, b4])
+    assert res.itemsets == mine_bruteforce(oracle_rows, 3, res.min_count, max_k=4)
+    # ... and the all-PAD rows age out too: two more small batches push
+    # them (and b2) past the 7-row window
+    b5 = pad_transactions([[0, 2], [1]], max_len=8)
+    eng.append(b5, 3)
+    rep = eng.append(b5, 3)
+    assert rep["expired_rows"] > 0
+    sm = eng.stream()
+    assert not sm._empty_trail  # the segment-less rows were retracted
+    res2 = eng.submit_stream(SPEC.with_(min_sup=0.2))
+    assert res2.n_rows == sum(s.n_rows for s in sm.db.segments)
+
+
+def test_window_parity_paper_db_anchor(paper_db):
+    # the paper's Table 1 database, split 2+3, window of one batch: the
+    # windowed answer is exactly the last 3 transactions' frequent sets
+    rows, n_items = paper_db
+    eng = MiningEngine()
+    ss = StreamSpec(window_batches=1)
+    spec = SPEC.with_(min_count=2, max_k=3)
+    eng.append(rows[:2], n_items, spec=spec, stream_spec=ss)
+    eng.append(rows[2:], n_items, spec=spec, stream_spec=ss)
+    res = eng.submit_stream(spec)
+    assert res.n_rows == len(rows) - 2
+    assert res.itemsets == mine_bruteforce(rows[2:], n_items, 2, max_k=3)
+
+
+def test_windowed_compaction_respects_window_boundaries():
+    # compaction inside a windowed stream folds a contiguous append-order
+    # run, so expiry stays segment-granular and answers stay exact
+    batches, n_items = _batches(7, sizes=(12, 10, 14, 11, 13, 12))
+    ss = StreamSpec(window_rows=45, max_segments=3, compact_fanin=2,
+                    compact_async=False)
+    eng, _ = _windowed_engine(batches, n_items, ss)
+    sm = eng.stream()
+    assert sm.stats["compactions"] >= 1
+    # every retained segment is a contiguous run: seg_ids sorted == order
+    ids = [s.seg_id for s in sm.db.segments]
+    assert ids == sorted(ids)
+    retained = _retained_rows(eng)
+    res = eng.submit_stream(SPEC)
+    assert res.n_rows == len(retained)
+    assert res.itemsets == mine_bruteforce(retained, n_items, res.min_count, max_k=4)
+
+
+def test_deterministic_interleaving_parity_and_diff_reconstruction():
+    # hypothesis-free anchor for the property tests: a fixed pseudo-random
+    # append/compact interleaving where every step must keep (1) windowed
+    # parity with the oracle over the retained rows and (2) the standing
+    # diff stream replaying to the live answer
+    rng = np.random.default_rng(11)
+    n_items = 8
+    ss = StreamSpec(window_rows=60, max_segments=4, compact_fanin=2,
+                    compact_async=False)
+    eng = MiningEngine()
+    eng.stream(n_items=n_items, spec=SPEC, stream_spec=ss)
+    q = eng.register_standing(SPEC)
+    for k in range(8):
+        eng.append(random_db(rng, 12 + int(rng.integers(0, 18)), n_items, 5),
+                   n_items)
+        retained = _retained_rows(eng)
+        res = eng.submit_stream(SPEC)
+        assert res.n_rows == len(retained)
+        assert res.itemsets == mine_bruteforce(
+            retained, n_items, res.min_count, max_k=4)
+        assert replay_diffs(q.diffs) == q.latest == res.itemsets
+
+
+# ------------------------------------------------------------------- decay
+def test_decayed_supports_match_damped_oracle():
+    batches, n_items = _batches(8, sizes=(20, 15, 25, 18))
+    decay = 0.5  # dyadic: float accumulation is exact, equality is literal
+    spec = SPEC.with_(min_sup=None, min_count=3)
+    eng = MiningEngine()
+    ss = StreamSpec(decay=decay)
+    for b in batches:
+        eng.append(b, n_items, spec=spec, stream_spec=ss)
+    res = eng.submit_stream(spec)
+    oracle = damped_oracle(batches, n_items, decay, 3.0, max_k=4)
+    assert set(res.itemsets) == set(oracle)
+    for t, s in res.itemsets.items():
+        assert isinstance(s, float)
+        assert s == oracle[t]  # exact dyadic arithmetic, not isclose
+    st = res.service_stats
+    assert st["decay"] == decay
+    assert st["weighted_rows"] == pytest.approx(
+        sum(len(b) * decay ** (len(batches) - 1 - i)
+            for i, b in enumerate(batches)))
+
+
+def test_decayed_stream_refuses_compaction():
+    batches, n_items = _batches(9, sizes=(15, 15))
+    eng = MiningEngine()
+    for b in batches:
+        eng.append(b, n_items, spec=SPEC, stream_spec=StreamSpec(decay=0.5))
+    with pytest.raises(ValueError, match="decay"):
+        eng.stream().compact()
+
+
+# --------------------------------------------------------- standing queries
+def test_standing_query_diffs_replay_to_the_live_answer():
+    batches, n_items = _batches(10, sizes=(25, 18, 31, 12))
+    eng = MiningEngine()
+    ss = StreamSpec(window_rows=50)
+    eng.stream(n_items=n_items, spec=SPEC, stream_spec=ss)
+    q = eng.register_standing(SPEC)
+    assert q.diffs[0].cause == "register" and q.diffs[0].total == 0
+    causes = []
+    for b in batches:
+        rep = eng.append(b, n_items)
+        assert rep["diffs"] == 1
+        causes.append(q.diffs[-1].cause)
+    assert "append" in causes and "expire" in causes
+    final = eng.submit_stream(SPEC)
+    assert replay_diffs(q.diffs) == q.latest == final.itemsets
+    assert q.diffs[-1].n_rows == final.n_rows
+    retained = _retained_rows(eng)
+    assert final.itemsets == mine_bruteforce(
+        retained, n_items, final.min_count, max_k=4)
+
+
+def test_standing_query_seed_pruning_stays_exact():
+    # pairs (0,1)/(0,2)/(1,2) are frequent but the triple is rare: the
+    # first refresh dispatches {0,1,2} and settles it at 10 < min_count;
+    # the next refresh's seed bound (10 + 5 rows appended since) proves
+    # it dead without dispatching it — a pruned candidate, same answer
+    n_items = 4
+    spec = SPEC.with_(min_sup=None, min_count=35)
+    tx = [[0, 1]] * 30 + [[0, 2]] * 30 + [[1, 2]] * 30 + [[0, 1, 2]] * 10
+    b1 = pad_transactions(tx, max_len=3)
+    b2 = pad_transactions([[0, 1, 2]] * 5, max_len=3)
+    eng = MiningEngine()
+    eng.stream(n_items=n_items, spec=spec, stream_spec=StreamSpec())
+    q = eng.register_standing(spec)
+    eng.append(b1, n_items)
+    eng.append(b2, n_items)
+    st = eng.stream_stats()["default"]
+    assert st["seed_pruned_candidates"] > 0  # the seed actually pruned
+    allrows = _retained_rows(eng)
+    assert q.latest == mine_bruteforce(allrows, n_items, 35, max_k=4)
+    assert replay_diffs(q.diffs) == q.latest
+    # and an unseeded mine agrees bit-for-bit
+    assert eng.submit_stream(spec).itemsets == q.latest
+
+
+def test_standing_query_patterns_ride_the_delivered_view():
+    from repro.core.patterns import closed_itemsets
+
+    batches, n_items = _batches(12, sizes=(25, 20, 22))
+    eng = MiningEngine()
+    eng.stream(n_items=n_items, spec=SPEC, stream_spec=StreamSpec())
+    q = eng.register_standing(SPEC.with_(patterns="closed"))
+    for b in batches:
+        eng.append(b, n_items)
+    full = eng.submit_stream(SPEC).itemsets
+    assert q.latest == closed_itemsets(full)
+    assert replay_diffs(q.diffs) == q.latest
+
+
+def test_standing_query_next_diff_future_and_cancel():
+    batches, n_items = _batches(13, sizes=(20, 15, 18))
+    eng = MiningEngine()
+    eng.stream(n_items=n_items, spec=SPEC, stream_spec=StreamSpec())
+    q = eng.register_standing(SPEC)
+    f = q.next_diff()
+    assert not f.done()
+    eng.append(batches[0], n_items)
+    assert f.result(timeout=5) is q.diffs[-1]
+    eng.cancel_standing(q)
+    n = len(q.diffs)
+    eng.append(batches[1], n_items)
+    assert len(q.diffs) == n and not q.active
+    assert eng.stream_stats()["default"]["standing_queries"] == 0
+
+
+def test_standing_register_rejects_bad_spec_and_registers_nothing():
+    batches, n_items = _batches(14, sizes=(20,))
+    eng = MiningEngine()
+    eng.append(batches[0], n_items, spec=SPEC, stream_spec=StreamSpec())
+    with pytest.raises(ValueError):
+        eng.register_standing(SPEC.with_(algorithm="apriori"))
+    assert eng.stream_stats()["default"]["standing_queries"] == 0
+
+
+# -------------------------------------------------------------------- chaos
+def test_expiry_failure_skips_and_self_heals():
+    from repro.fault.failures import ChaosInjector, installed
+
+    batches, n_items = _batches(15, sizes=(20, 15, 25, 18, 22))
+    ss = StreamSpec(window_rows=40)
+    eng = MiningEngine()
+    inj = ChaosInjector(seed=0).arm("stream.expire", times=2)
+    with installed(inj):
+        for b in batches[:4]:
+            eng.append(b, n_items, spec=SPEC, stream_spec=ss)
+    st = eng.stream_stats()["default"]
+    assert st["expire_errors"] == 2
+    # chaos is off: the next append expires everything the window owes
+    eng.append(batches[4], n_items)
+    db = eng.stream().db
+    assert db.n_rows - db.segments[0].n_rows < ss.window_rows
+    retained = _retained_rows(eng)
+    res = eng.submit_stream(SPEC)
+    assert res.n_rows == len(retained)
+    assert res.itemsets == mine_bruteforce(retained, n_items, res.min_count, max_k=4)
+
+
+def test_diff_failure_keeps_the_chain_consistent():
+    from repro.fault.failures import ChaosInjector, installed
+
+    batches, n_items = _batches(16, sizes=(20, 15, 18, 22))
+    eng = MiningEngine()
+    eng.stream(n_items=n_items, spec=SPEC, stream_spec=StreamSpec())
+    q = eng.register_standing(SPEC)
+    inj = ChaosInjector(seed=0).arm("stream.diff", after=1, times=1)
+    with installed(inj):
+        for b in batches[:3]:
+            eng.append(b, n_items)
+    eng.append(batches[3], n_items)
+    st = eng.stream_stats()["default"]
+    assert st["diff_errors"] == 1
+    assert len(q.diffs) == 4  # register + 3 delivered (one append skipped)
+    final = eng.submit_stream(SPEC)
+    assert replay_diffs(q.diffs) == q.latest == final.itemsets
+
+
+# ------------------------------------------------------------------ service
+def test_service_standing_query_futures_arrive_in_order():
+    from repro.mining.service import MiningService
+
+    batches, n_items = _batches(17, sizes=(22, 18, 20))
+    with MiningService(batch_window_s=0.01) as svc:
+        svc.engine.stream("w", n_items=n_items, spec=SPEC,
+                          stream_spec=StreamSpec(window_rows=40))
+        q = svc.register_standing(SPEC, stream="w").result(timeout=60)
+        afuts = [svc.append(b, n_items, stream="w") for b in batches]
+        res = svc.submit_stream(SPEC, stream="w").result(timeout=60)
+        reps = [f.result(timeout=60) for f in afuts]
+        assert all(r["diffs"] == 1 for r in reps)
+        # the query submitted after the appends observed all of them
+        assert replay_diffs(q.diffs) == q.latest == res.itemsets
+        svc.cancel_standing(q, stream="w").result(timeout=60)
+        assert svc.engine.stream_stats()["w"]["standing_queries"] == 0
+
+
+# -------------------------------------------------------------- distributed
+@pytest.fixture(scope="module")
+def windowed_cluster(tmp_path_factory):
+    batches, n_items = _batches(18, sizes=(25, 18, 31, 12))
+    ck = tmp_path_factory.mktemp("cont-ck")
+    eng = MiningEngine()
+    dm = eng.distribute(
+        name="w", n_items=n_items, workers=2, spec=SPEC,
+        stream_spec=StreamSpec(window_batches=2), checkpoint_dir=str(ck),
+    )
+    q = dm.register(SPEC)
+    reports = [dm.append(b) for b in batches]
+    yield eng, dm, q, reports, batches, n_items, str(ck)
+    dm.close()
+
+
+def test_distributed_window_parity_and_standing(windowed_cluster):
+    _, dm, q, reports, batches, n_items, _ = windowed_cluster
+    assert [r["expired"] for r in reports] == [0, 0, 1, 1]
+    retained = np.concatenate(batches[-2:])
+    res = dm.mine(SPEC)
+    assert res.n_rows == len(retained)
+    assert res.itemsets == mine_bruteforce(retained, n_items, res.min_count, max_k=4)
+    assert replay_diffs(q.diffs) == q.latest == res.itemsets
+    assert dm.stats["expired_segments"] == 2
+    assert dm.stats["diffs_delivered"] == len(q.diffs)
+
+
+def test_distributed_restore_replays_expired_segments(windowed_cluster):
+    _, dm, _, _, batches, n_items, ck = windowed_cluster
+    before = dm.mine(SPEC)
+    eng2 = MiningEngine()
+    dm2 = eng2.distribute(
+        name="w2", n_items=n_items, workers=2, spec=SPEC,
+        stream_spec=StreamSpec(window_batches=2), checkpoint_dir=ck,
+    )
+    try:
+        assert dm2._expired == dm._expired
+        res = dm2.mine(SPEC)
+        assert res.itemsets == before.itemsets
+        assert res.n_rows == before.n_rows
+        # the restored rank space matches: digests of live segments agree
+        assert dm2._db_digest() == dm._db_digest()
+    finally:
+        dm2.close()
+
+
+def test_distributed_empty_batches_age_out_of_the_window(tmp_path):
+    # an all-PAD batch creates no segment but its rows join db.n_rows;
+    # the append-order ledger must expire them like any other entry —
+    # and a restored coordinator must agree
+    n_items = 6
+    b1 = pad_transactions(
+        [[0, 1], [1, 2], [0, 2], [3], [0, 1, 2], [2, 3], [1, 3], [0, 3]],
+        max_len=4)
+    b_pad = np.full((6, 4), PAD, np.int32)
+    b2 = pad_transactions(
+        [[0, 1], [0, 1, 2], [2, 3], [1, 2], [0, 3], [1, 3], [0, 2], [3]],
+        max_len=4)
+    b3 = pad_transactions([[0, 1], [1, 2], [0, 1, 2], [2]], max_len=4)
+    eng = MiningEngine()
+    dm = eng.distribute(
+        name="we", n_items=n_items, workers=1, spec=SPEC,
+        stream_spec=StreamSpec(window_rows=10), checkpoint_dir=str(tmp_path),
+    )
+    try:
+        reports = [dm.append(b) for b in (b1, b_pad, b2, b3)]
+        # append 3 expires the 8-row segment; append 4 expires the 6
+        # segment-less PAD rows (a rows-only expiry: no segment dropped)
+        assert [r["expired"] for r in reports] == [0, 0, 1, 0]
+        assert [r["expired_rows"] for r in reports] == [0, 0, 8, 6]
+        assert not dm._empty_rows
+        retained = np.concatenate([b2, b3])
+        res = dm.mine(SPEC)
+        assert res.n_rows == len(retained) == 12
+        assert res.itemsets == mine_bruteforce(
+            retained, n_items, res.min_count, max_k=4)
+        eng2 = MiningEngine()
+        dm2 = eng2.distribute(
+            name="we2", n_items=n_items, workers=1, spec=SPEC,
+            stream_spec=StreamSpec(window_rows=10),
+            checkpoint_dir=str(tmp_path),
+        )
+        try:
+            res2 = dm2.mine(SPEC)
+            assert res2.n_rows == res.n_rows
+            assert res2.itemsets == res.itemsets
+            assert dm2._db_digest() == dm._db_digest()
+        finally:
+            dm2.close()
+    finally:
+        dm.close()
+
+
+def test_distributed_rejects_decay():
+    eng = MiningEngine()
+    with pytest.raises(ValueError, match="decay"):
+        eng.distribute(name="nope", n_items=8, workers=1,
+                       stream_spec=StreamSpec(decay=0.5))

@@ -1,0 +1,87 @@
+"""Property tests for the continuous-mining invariants.
+
+Random append/expire/compact interleavings over a sliding window must
+keep two properties at every step:
+
+  1. windowed parity — the live windowed mine is bit-identical to the
+     brute-force oracle over exactly the retained (window) rows;
+  2. diff reconstruction — a standing query's cumulative diff stream,
+     replayed from empty, equals its delivered answer, and the final
+     delivered answer equals the final frequent set.
+
+Expiry is driven implicitly (window_rows at append time) and compaction
+both implicitly (max_segments) and explicitly (forced passes drawn into
+the interleaving). The deterministic (hypothesis-free) anchor lives in
+tests/test_continuous.py::
+test_deterministic_interleaving_parity_and_diff_reconstruction so the
+invariant is exercised even where hypothesis is absent.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import pad_transactions
+from repro.core.oracle import mine_bruteforce
+from repro.mining import MineSpec, MiningEngine
+from repro.mining.continuous import replay_diffs
+from repro.mining.stream import StreamSpec
+
+N_ITEMS = 6
+SPEC = MineSpec(algorithm="hprepost", min_count=2, max_k=3, candidate_unit=8)
+
+
+@st.composite
+def interleaving(draw):
+    """2-6 ops: each an append of 1-8 random short transactions, possibly
+    followed by a forced compaction pass."""
+    n_ops = draw(st.integers(2, 6))
+    ops = []
+    for _ in range(n_ops):
+        n_rows = draw(st.integers(1, 8))
+        tx = [
+            draw(st.lists(st.integers(0, N_ITEMS - 1), min_size=0, max_size=4))
+            for _ in range(n_rows)
+        ]
+        ops.append((tx, draw(st.booleans())))
+    window = draw(st.integers(4, 20))
+    return ops, window
+
+
+def _pad(tx):
+    return pad_transactions(tx, max_len=4) if tx else np.empty((0, 4), np.int32)
+
+
+def _retained(eng):
+    db = eng.stream().db
+    if not db.segments:
+        return np.empty((0, 4), np.int32)
+    return np.concatenate([s.rows[:s.n_rows] for s in db.segments])
+
+
+@settings(max_examples=20, deadline=None)
+@given(interleaving())
+def test_windowed_interleavings_keep_parity_and_replay(case):
+    ops, window = case
+    ss = StreamSpec(window_rows=window, max_segments=3, compact_fanin=2,
+                    compact_async=False)
+    eng = MiningEngine()
+    eng.stream(n_items=N_ITEMS, spec=SPEC, stream_spec=ss)
+    q = eng.register_standing(SPEC)
+    for tx, force_compact in ops:
+        eng.append(_pad(tx), N_ITEMS)
+        if force_compact and len(eng.stream().db.segments) > 1:
+            eng.stream().compact()
+        retained = _retained(eng)
+        res = eng.submit_stream(SPEC)
+        # n_rows covers the retained segments plus any still-windowed
+        # all-PAD appends (segment-less rows; support-neutral)
+        empty_rows = sum(n for _, n in eng.stream()._empty_trail)
+        assert res.n_rows == len(retained) + empty_rows
+        assert res.itemsets == mine_bruteforce(retained, N_ITEMS, 2, max_k=3)
+        # the diff chain replays to the delivered answer at every step
+        assert replay_diffs(q.diffs) == q.latest
+    # the cumulative diff stream reconstructs the final frequent set
+    final = eng.submit_stream(SPEC)
+    assert replay_diffs(q.diffs) == q.latest == final.itemsets
