@@ -42,6 +42,13 @@
 #                       successes are bit-identical to a clean run,
 #                       backpressure is immediate typed Overloaded, and every
 #                       delivered diff chain replays exactly
+#   make obs-smoke    - observability end-to-end: a short serve with the
+#                       periodic stats emitter (JSON-lines every 0.2s) and
+#                       the request tracer attached — fails unless >=2
+#                       periodic snapshots landed during the run, the trace
+#                       file is a valid Chrome trace-event list, and the
+#                       queue-wait / prep / mine latency histograms in
+#                       stats()["histograms"] are populated with quantiles
 #   make tune-smoke   - kernel autotuner end-to-end: a cold process runs the
 #                       timed block search and persists kernel_plans.json
 #                       next to the snapshot dir; a second process must serve
@@ -58,8 +65,9 @@ STREAM_SNAP := .stream-smoke-snapshots
 DIST_SNAP := .dist-smoke-snapshots
 TUNE_SNAP := .tune-smoke-snapshots
 WINDOW_SNAP := .window-smoke-snapshots
+OBS_OUT := .obs-smoke-out
 
-.PHONY: test test-tier1 bench-smoke bench-json bench-gate mine-smoke serve-smoke stream-smoke dist-smoke tune-smoke window-smoke chaos-smoke
+.PHONY: test test-tier1 bench-smoke bench-json bench-gate mine-smoke serve-smoke stream-smoke dist-smoke tune-smoke window-smoke chaos-smoke obs-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -122,6 +130,14 @@ window-smoke:
 
 chaos-smoke:
 	$(PY) -m benchmarks.chaos_soak
+
+obs-smoke:
+	rm -rf $(OBS_OUT)
+	$(PY) -m repro.launch.mine --serve \
+		--dataset mushroom --scale 0.05 --sweep 0.4,0.3,0.2 --max-k 4 \
+		--stats-interval 0.2 --stats-out $(OBS_OUT)/stats.jsonl \
+		--trace $(OBS_OUT)/trace.json --expect-obs
+	rm -rf $(OBS_OUT)
 
 bench-gate:
 	$(PY) -m benchmarks.bench_gate

@@ -5,11 +5,16 @@ Three checks, all fixed-seed and self-verifying:
 
   ``soak``       — install a seeded ``ChaosInjector`` over every service
                    failure point (enqueue, prep, serve, wave launch,
-                   snapshot read) and flood the service with mixed-QoS
-                   requests. PASS iff every accepted Future resolves —
-                   with a result or a typed error — every successful
-                   result is bit-identical to a clean single-engine run,
-                   and the admission accounting drains back to zero.
+                   snapshot read, telemetry emit) and flood the service
+                   with mixed-QoS requests while a periodic ``StatsEmitter``
+                   snapshots the service. PASS iff every accepted Future
+                   resolves — with a result or a typed error — every
+                   successful result is bit-identical to a clean
+                   single-engine run, the admission accounting drains back
+                   to zero, and chaos-dropped emits were swallowed by the
+                   emitter (counted in ``dropped``) without blocking or
+                   failing a single request Future, with later snapshots
+                   still landing as parseable JSON lines.
   ``overload``   — bound the queue tightly and flood it. PASS iff the
                    overflow is rejected *immediately* with typed
                    ``Overloaded`` (never buffered, never hung), everything
@@ -34,6 +39,8 @@ Usage:
 """
 from __future__ import annotations
 
+import io
+import json
 import sys
 import time
 
@@ -62,6 +69,8 @@ def _clean_baselines(dbs):
 
 
 def soak() -> None:
+    from repro.mining.telemetry import StatsEmitter
+
     dbs = _dbs()
     clean = _clean_baselines(dbs)
     inj = ChaosInjector(seed=SOAK_SEED)
@@ -70,9 +79,12 @@ def soak() -> None:
     inj.arm("service.enqueue", times=0, prob=0.08)
     inj.arm("mine.wave", times=0, prob=0.04)
     inj.arm("snapshot.read", times=0, prob=0.25)
+    inj.arm("telemetry.emit", times=0, prob=0.6)
 
     t0 = time.perf_counter()
-    with MiningService(batch_window_s=0.01, max_queue_depth=12) as svc:
+    sink = io.StringIO()
+    with MiningService(batch_window_s=0.01, max_queue_depth=12) as svc, \
+            StatsEmitter(svc.stats, sink, interval_s=0.01) as emitter:
         with installed(inj):
             futs = []
             for k in range(N_SOAK):
@@ -109,11 +121,28 @@ def soak() -> None:
     fired = sum(inj.fired.values())
     if fired == 0:
         raise SystemExit("the chaos schedule never fired; soak proved nothing")
+    # telemetry containment: chaos drops hit the emitter, never a request.
+    # The Future checks above already proved no request was harmed; here we
+    # prove the drops actually happened, were swallowed (not raised), and
+    # that later snapshots still landed as parseable JSON lines.
+    est = emitter.stats
+    if est["dropped"] < 1:
+        raise SystemExit(f"chaos never dropped an emit; telemetry containment "
+                         f"unproven: {est}")
+    if est["periodic"] < 1:
+        raise SystemExit(f"the emitter never landed a periodic snapshot "
+                         f"between drops: {est}")
+    if est["errors"] != 0:
+        raise SystemExit(f"emitter hit non-chaos errors: {est}")
+    for line in sink.getvalue().splitlines():
+        json.loads(line)  # every landed line must be a parseable snapshot
     print(
         f"chaos soak: {N_SOAK} requests in {time.perf_counter() - t0:.1f}s -> "
         f"{ok} exact results, {fail} typed failures, 0 orphans"
     )
     print(f"  injected: {dict(inj.fired)}")
+    print(f"  emitter: {est['periodic']} periodic landed, {est['dropped']} "
+          f"chaos-dropped, 0 request futures harmed")
     print(
         f"  counters: {snap['counters']} "
         f"worker_restarts={snap['service']['worker_restarts']}"

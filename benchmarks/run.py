@@ -19,7 +19,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
-BENCH_PR = 9  # this PR's trajectory tag: emit_json writes BENCH_PR<n>.json
+BENCH_PR = 10  # this PR's trajectory tag: emit_json writes BENCH_PR<n>.json
 
 
 def emit_json(path: str | None = None, records=None, pr: int = BENCH_PR) -> str:
@@ -28,7 +28,9 @@ def emit_json(path: str | None = None, records=None, pr: int = BENCH_PR) -> str:
     through one warm ``MiningEngine``, the service rows (cross-group
     overlap + snapshot warm-start), the streaming rows (append
     throughput vs full rebuild, segmented query latency, compaction cost),
-    and the distributed rows (1/2/4-worker scale-out + recovery time).
+    the distributed rows (1/2/4-worker scale-out + recovery time), and the
+    telemetry rows (instrumented vs bare warm submit + the per-observation
+    histogram/snapshot primitives).
     Future PRs diff their own emit against this file instead of re-deriving
     a baseline (``make bench-gate`` automates the diff).
 
@@ -39,12 +41,14 @@ def emit_json(path: str | None = None, records=None, pr: int = BENCH_PR) -> str:
     from benchmarks.bench_kernels import run as kernels_run
     from benchmarks.bench_service import run as service_run
     from benchmarks.bench_stream import run as stream_run
+    from benchmarks.bench_telemetry import run as telemetry_run
 
     if path is None:
         path = os.path.join(os.path.dirname(__file__), "..", f"BENCH_PR{pr}.json")
     if records is None:
         records = (kernels_run() + service_run(quick=True)
-                   + stream_run(quick=True) + distributed_run(quick=True))
+                   + stream_run(quick=True) + distributed_run(quick=True)
+                   + telemetry_run(quick=True))
     payload = {
         "schema": "bench-trajectory-v1",
         "pr": pr,
@@ -100,7 +104,12 @@ def main() -> None:
     drecs = distributed_run(quick=args.quick)
     for name, us, note in drecs:
         print(f"{name},{us:.0f},{note}")
-    emit_json(records=recs + srecs + trecs + drecs)
+    from benchmarks.bench_telemetry import run as telemetry_run
+
+    orecs = telemetry_run(quick=args.quick)
+    for name, us, note in orecs:
+        print(f"{name},{us:.0f},{note}")
+    emit_json(records=recs + srecs + trecs + drecs + orecs)
 
     # --- scaling (subprocesses with fake devices)
     if not args.skip_scaling:

@@ -40,6 +40,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import encoding as enc
 from repro.fault import failures
+from repro.mining.telemetry import trace
 from repro.core.ppc import build_ppc_jnp
 from repro.core.prepost import PrepostResult
 from repro.kernels.cooccur.ops import cooccurrence_matrix
@@ -864,19 +865,20 @@ class HPrepostMiner:
                 plan = self._kernel_plan(Cpad, prepared.width)
                 stages["planned_candidates"] += float(len(ranks))
                 failures.fire("mine.wave")
-                new_state, sups = wave_fn(
-                    packed,
-                    prev_state,
-                    self._shard(parent_arr, self._cand_spec),
-                    self._shard(base_idx, self._cand_spec),
-                    self._shard(q_idx, self._cand_spec),
-                    np.int32(stop_count),
-                    la_block=plan.la_block,
-                    ly_block=plan.ly_block,
-                    batch_block=plan.batch_block,
-                    backend=plan.backend,
-                    early_stop=plan.early_stop,
-                )
+                with trace.span("mine.wave", k=level, candidates=len(ranks)):
+                    new_state, sups = wave_fn(
+                        packed,
+                        prev_state,
+                        self._shard(parent_arr, self._cand_spec),
+                        self._shard(base_idx, self._cand_spec),
+                        self._shard(q_idx, self._cand_spec),
+                        np.int32(stop_count),
+                        la_block=plan.la_block,
+                        ly_block=plan.ly_block,
+                        batch_block=plan.batch_block,
+                        backend=plan.backend,
+                        early_stop=plan.early_stop,
+                    )
                 self.stage_counters["waves"] += 1
                 dispatched = (ranks, parents, slot_of, sups)
                 peak = max(peak, int(new_state.size * 4 // max(self.D * Mb, 1)))
@@ -893,7 +895,8 @@ class HPrepostMiner:
             surv_ranks = surv_slots = None
             if pending is not None:
                 p_ranks, p_slots, p_sups = pending
-                host = np.asarray(jax.device_get(p_sups))  # blocks on wave l-1
+                with trace.span("mine.reduce", k=level - 1):
+                    host = np.asarray(jax.device_get(p_sups))  # blocks on wave l-1
                 svals = host[p_slots]
                 keep = svals >= min_count
                 if keep.any():
@@ -1089,9 +1092,11 @@ class HPrepostMiner:
                 # stop_count stays 0: per-segment supports are partial until
                 # the cross-segment reduce, so only the host bound prunes here
                 stages["planned_candidates"] += float(len(ranks))
-                token = executor.dispatch(
-                    level, parent_arr, base_idx, q_idx, wave_fn is self._wave_local
-                )
+                with trace.span("mine.wave", k=level, candidates=len(ranks),
+                                segments=executor.n_segments):
+                    token = executor.dispatch(
+                        level, parent_arr, base_idx, q_idx, wave_fn is self._wave_local
+                    )
                 dispatched = (ranks, parents, slot_of, token)
                 peak = max(peak, int(executor.state_bytes))
                 slots_per_shard = Cpad // Mb
@@ -1107,7 +1112,8 @@ class HPrepostMiner:
                 # the streaming reduce: per-candidate supports summed over
                 # segments (additivity over disjoint partitions), THEN
                 # thresholded — this blocks on the settled wave
-                host = executor.collect(p_token)
+                with trace.span("mine.reduce", k=level - 1):
+                    host = executor.collect(p_token)
                 peak = max(peak, int(executor.state_bytes))
                 svals = host[p_slots]
                 keep = svals >= min_count

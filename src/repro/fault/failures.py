@@ -13,7 +13,10 @@ host heartbeat loss) arrive from the platform; here they are modeled so the
     a hit skips the pass, the window self-heals next append — and
     ``stream.diff`` fires before each standing-query refresh — a hit
     leaves that query's delivered state untouched so its diff chain
-    stays replayable). Production code
+    stays replayable — and ``telemetry.emit`` fires before each periodic
+    stats snapshot (``repro.mining.telemetry.StatsEmitter``) — a hit
+    drops that emit line, counted in the emitter's ``dropped`` stat,
+    and must never block or fail a request Future). Production code
     calls ``fire(point)`` — a no-op until a test/soak ``install``s an
     injector — and the injector decides, deterministically (nth hit) or
     probabilistically (seeded), whether that hit dies and with what

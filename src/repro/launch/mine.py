@@ -75,16 +75,75 @@ def _report_plans(engine, expect: str | None) -> None:
         )
 
 
+def _verify_obs(args, snap, emitter, rec) -> None:
+    """``--expect-obs``: the obs-smoke CI check — fail unless the run
+    emitted live periodic stats snapshots (not just the final one), wrote
+    a loadable Chrome trace-event file, and populated the queue-wait /
+    prep / mine latency histograms in the service stats snapshot."""
+    if emitter is None or emitter.stats["periodic"] < 2:
+        periodic = emitter.stats["periodic"] if emitter is not None else 0
+        raise SystemExit(
+            f"expected >=2 periodic stats snapshots during the run but the "
+            f"emitter delivered {periodic} (interval={args.stats_interval}s); "
+            f"emitter stats = {emitter.stats if emitter else None}"
+        )
+    with open(args.trace) as f:
+        events = json.load(f)
+    bad = [e for e in events if not ("name" in e and "ph" in e and "ts" in e)]
+    if not events or bad:
+        raise SystemExit(
+            f"{args.trace} is not a valid Chrome trace-event list: "
+            f"{len(events)} events, {len(bad)} malformed"
+        )
+    if rec is not None and len(rec) != len(events):
+        raise SystemExit(
+            f"trace file lost spans: recorder holds {len(rec)}, "
+            f"file holds {len(events)}"
+        )
+    hists = (snap or {}).get("histograms", {})
+    for key in ("admission.queue_wait_s", "engine.prep_s", "engine.mine_s",
+                "service.request_s"):
+        h = hists.get(key)
+        if not h or h.get("count", 0) < 1 or "p95_s" not in h:
+            raise SystemExit(
+                f"expected a populated latency histogram {key!r} in "
+                f"stats()['histograms'] but found {h!r} "
+                f"(present: {sorted(hists)})"
+            )
+    print(
+        f"observability verified: {emitter.stats['periodic']} periodic "
+        f"snapshot(s), {len(events)} trace event(s), "
+        f"{len(hists)} live histogram(s)"
+    )
+
+
 def _serve(args, rows, n_items: int, name: str, spec: MineSpec, mesh):
     """Serve the request load through a resident MiningService: the sweep
     (or the single threshold) submitted concurrently, plus one
-    host-algorithm request riding the same batch on a worker thread."""
+    host-algorithm request riding the same batch on a worker thread.
+    ``--stats-interval`` rides a background ``StatsEmitter`` over
+    ``svc.stats`` for the whole serve; ``--trace`` attaches a
+    ``TraceRecorder`` and saves the request span trees as Chrome trace
+    events after the drain."""
+    import contextlib
+
     from repro.mining.service import MiningService
+    from repro.mining.telemetry import StatsEmitter, TraceRecorder, trace
 
     fracs = [float(s) for s in args.sweep.split(",")] if args.sweep else [args.min_sup]
-    with MiningService(
-        mesh=mesh, snapshot_dir=args.snapshot_dir, batch_window_s=0.05
-    ) as svc:
+    rec = TraceRecorder() if args.trace else None
+    emitter = None
+    snap = None
+    with contextlib.ExitStack() as stack:
+        svc = stack.enter_context(MiningService(
+            mesh=mesh, snapshot_dir=args.snapshot_dir, batch_window_s=0.05
+        ))
+        if args.stats_interval:
+            emitter = stack.enter_context(StatsEmitter(
+                svc.stats, args.stats_out, interval_s=args.stats_interval
+            ))
+        if rec is not None:
+            stack.enter_context(trace.attached(rec))
         futures = svc.sweep(rows, n_items, spec, fracs)
         labels = [f"min_sup={f:g}" for f in fracs]
         if spec.algorithm != "apriori":
@@ -135,8 +194,20 @@ def _serve(args, rows, n_items: int, name: str, spec: MineSpec, mesh):
             print("warm start verified: zero prep stages, served from snapshots")
         if args.tune or args.expect_plans:
             _report_plans(engine, args.expect_plans)
+        if args.stats or args.expect_obs:
+            snap = svc.stats()
         if args.stats:
-            print(json.dumps(svc.stats(), indent=2, sort_keys=True, default=str))
+            print(json.dumps(snap, indent=2, sort_keys=True, default=str))
+    if rec is not None:
+        n_ev = rec.save_chrome(args.trace)
+        print(f"trace: {n_ev} span event(s) -> {args.trace}")
+    if emitter is not None:
+        print(
+            f"stats emitter: {emitter.stats['periodic']} periodic + 1 final "
+            f"snapshot(s) -> {args.stats_out}, dropped={emitter.stats['dropped']}"
+        )
+    if args.expect_obs:
+        _verify_obs(args, snap, emitter, rec)
     return results
 
 
@@ -211,7 +282,16 @@ def _append_distributed(args, rows, n_items: int, name: str, spec: MineSpec, mes
         if args.tune or args.expect_plans:
             _report_plans(engine, args.expect_plans)
         if args.stats:
-            print(json.dumps(dm.stats, indent=2, sort_keys=True, default=str))
+            # the coordinator's counters plus the engine registry's
+            # distribution view (per-worker wave RPC latencies included)
+            tel = engine.telemetry.snapshot()
+            snap = dict(dm.stats)
+            snap["histograms"] = tel["histograms"]
+            snap["telemetry"] = {
+                "schema": tel["schema"], "counters": tel["counters"],
+                "gauges": tel["gauges"],
+            }
+            print(json.dumps(snap, indent=2, sort_keys=True, default=str))
         return results
     finally:
         dm.close()
@@ -387,6 +467,31 @@ def main(argv=None):
              "drill-down; with --workers, the coordinator's stats dict)",
     )
     ap.add_argument(
+        "--stats-interval", type=float, default=0.0, metavar="S",
+        help="with --serve: run a background stats emitter for the whole "
+             "serve, writing one JSON-lines snapshot of the full operator "
+             "stats (latency histograms included) every S seconds",
+    )
+    ap.add_argument(
+        "--stats-out", default="-", metavar="FILE",
+        help="sink for --stats-interval snapshots: a file path (appended, "
+             "parent dirs created) or '-' for stderr (the default)",
+    )
+    ap.add_argument(
+        "--trace", default=None, metavar="FILE",
+        help="with --serve: record per-request span trees (submit -> "
+             "admission wait -> classify -> prep -> waves -> reduce -> "
+             "resolve) and save them as Chrome trace events "
+             "(chrome://tracing / Perfetto)",
+    )
+    ap.add_argument(
+        "--expect-obs", action="store_true",
+        help="with --serve --stats-interval --trace: fail unless >=2 "
+             "periodic snapshots were emitted while serving, the trace "
+             "file is a valid Chrome trace-event list, and the queue-wait "
+             "/ prep / mine histograms are populated (obs-smoke CI check)",
+    )
+    ap.add_argument(
         "--kill-worker", action="store_true",
         help="with --workers: after the first sweep, hard-kill one worker, "
              "re-mine, and fail unless the answers are bit-identical (and, "
@@ -435,6 +540,11 @@ def main(argv=None):
     if args.stats and not (args.serve or args.workers):
         ap.error("--stats dumps the service/coordinator snapshot; "
                  "use it with --serve or --workers")
+    if (args.stats_interval or args.trace) and not args.serve:
+        ap.error("--stats-interval/--trace ride the resident service; "
+                 "use them with --serve")
+    if args.expect_obs and not (args.serve and args.stats_interval and args.trace):
+        ap.error("--expect-obs needs --serve --stats-interval S --trace FILE")
 
     from repro.launch.mesh import make_mesh_from_spec
 

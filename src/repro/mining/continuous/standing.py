@@ -209,6 +209,13 @@ class StandingRegistry:
         st["diffs_delivered"] += 1
         st["diff_latency_s_total"] += lat
         st["last_diff_latency_s"] = lat
+        # distribution view of the same latency (the totals above stay for
+        # compatibility): per-stream refresh latency histogram
+        engine = getattr(owner, "engine", None)
+        if engine is not None:
+            engine.telemetry.histogram(
+                f"stream.{getattr(owner, 'name', 'default')}.diff_s"
+            ).record(lat)
         st["seed_pruned_candidates"] += int(
             res.stage_times_s.get("host_pruned_seed", 0)
         )

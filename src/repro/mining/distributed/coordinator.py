@@ -138,14 +138,24 @@ class RemoteSegmentExecutor:
         c._miner.stage_counters["seg_waves"] = (
             c._miner.stage_counters.get("seg_waves", 0) + self.n_segments
         )
-        return [(w, c._send(w, msg)) for w in self.workers], len(parent_arr)
+        t_disp = time.perf_counter()
+        return [(w, c._send(w, msg)) for w in self.workers], len(parent_arr), t_disp
 
     def collect(self, token) -> np.ndarray:
-        pairs, cpad = token
+        pairs, cpad, t_disp = token
         total = np.zeros(cpad, np.int64)
         state_bytes = 0
+        tel = self.coord.engine.telemetry
+        name = self.coord.name
         for w, seq in pairs:
             rep = self.coord._expect(w, seq)
+            # dispatch -> reply-consumed latency per worker: the raw
+            # material for straggler detection. Collection order skews a
+            # later worker's reading upward by at most the time spent
+            # summing earlier replies (its reply was already buffered).
+            tel.histogram(f"dist.{name}.worker{w.wid}.wave_rpc_s").record(
+                time.perf_counter() - t_disp
+            )
             total += np.asarray(rep["sups"], np.int64)
             state_bytes += int(rep.get("state_bytes", 0))
         self.state_bytes = state_bytes
@@ -584,6 +594,9 @@ class DistributedMiner:
             diffs = self.standing.refresh_all(
                 "expire" if n_exp_rows else "append"
             )
+            append_s = time.perf_counter() - t0
+            self.engine.telemetry.histogram(
+                f"dist.{self.name}.append_s").record(append_s)
             return {
                 "rows": int(len(rows)),
                 "total_rows": int(self.db.n_rows),
@@ -594,7 +607,7 @@ class DistributedMiner:
                 "diffs": int(diffs),
                 "prep_source": source,
                 "worker": worker,
-                "append_s": time.perf_counter() - t0,
+                "append_s": append_s,
             }
 
     def _expire(self) -> "tuple[int, int]":
@@ -888,10 +901,14 @@ class DistributedMiner:
         with self._op_lock:
             while True:
                 try:
-                    return self._mine_once(spec, t0, _seed, _seed_out)
+                    out = self._mine_once(spec, t0, _seed, _seed_out)
                 except WorkerDied as e:
                     self._failover(e.worker_id)
                     self.stats["query_retries"] += 1
+                    continue
+                self.engine.telemetry.histogram(
+                    f"dist.{self.name}.query_s").record(time.perf_counter() - t0)
+                return out
 
     def _mine_once(self, spec: MineSpec, t0: float,
                    seed: dict | None = None,

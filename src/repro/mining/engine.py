@@ -69,6 +69,12 @@ from repro.mining.registry import Miner, get_miner
 from repro.mining.result import MineResult
 from repro.mining.spec import MineSpec
 from repro.mining.service.store import SnapshotStore
+from repro.mining.telemetry import Registry
+
+# per-stage latency histograms are recorded for these stage_times_s keys
+# (only when > 0 — a prep_shared consumer's zeroed prep stages are not
+# observations, they are accounting)
+_STAGE_KEYS = ("job1_flist", "job2_ppc_pack", "f2_scan", "mining_waves")
 
 
 @dataclasses.dataclass
@@ -84,6 +90,10 @@ class MineRequest:
     n_items: int
     spec: MineSpec
     deadline_at: float | None = None
+    # root span id stamped by the service when a tracer is attached, so
+    # scheduler/engine spans parent into the request's tree. Like QoS
+    # fields, never part of any plan/prep/snapshot key.
+    trace_id: int | None = None
 
 
 class MiningEngine:
@@ -148,6 +158,13 @@ class MiningEngine:
         # live streaming databases (repro.mining.stream), by name; each
         # StreamingMiner serializes its own appends/queries internally
         self._streams: dict[str, object] = {}
+        # the session's latency/counter registry (repro.mining.telemetry)
+        # — shared by every layer stacked on this engine (admission queue,
+        # scheduler, streams, distributed coordinators), surfaced through
+        # ``MiningService.stats()["histograms"]`` and the periodic
+        # emitter. Execution-orthogonal: never part of any prep/device/
+        # snapshot key.
+        self.telemetry = Registry()
         # one coarse re-entrant lock over planning state (frontends, LRU,
         # fingerprint memo, counters); device/host mining itself runs
         # outside it, so threads overlap on the expensive parts only
@@ -183,7 +200,19 @@ class MiningEngine:
             self.stats["submits"] += 1
         if spec.algorithm == "hprepost" and self.prep_cache_bytes > 0:
             return self._submit_cached(rows, n_items, spec)
-        return self.frontend(spec.algorithm).mine(rows, n_items, spec)
+        res = self.frontend(spec.algorithm).mine(rows, n_items, spec)
+        self._observe_result(res)
+        return res
+
+    def _observe_result(self, res: MineResult) -> None:
+        """Record one answered request into the latency registry. Totals
+        stay in ``stats``/``cache_info``; these are the distributions."""
+        t = self.telemetry
+        t.histogram("engine.mine_s").record(res.wall_time_s)
+        for k in _STAGE_KEYS:
+            v = res.stage_times_s.get(k, 0.0)
+            if v > 0.0:
+                t.histogram(f"engine.stage.{k}_s").record(v)
 
     # --------------------------------------------------------- fingerprints
     @staticmethod
@@ -436,12 +465,16 @@ class MiningEngine:
         key = self._cache_key(rows, n_items, spec)
         min_count = spec.resolve(len(rows))
         need_waves = spec.max_k is None or spec.max_k > 1
+        t_lk = time.perf_counter()
         ent = self._cache_lookup(key, min_count, need_waves)
         source = "cache"
         if ent is None:
             ent = self._snapshot_load(key, min_count, need_waves, spec)
             source = "snapshot"
         if ent is not None:
+            self.telemetry.histogram(f"engine.{source}_hit_s").record(
+                time.perf_counter() - t_lk
+            )
             with self._lock:
                 self.stats["prepared_mines"] += 1
             _, prepared = ent
@@ -450,15 +483,18 @@ class MiningEngine:
             # PreparedDB layout only depends on the mesh (shared engine-wide)
             res = fe.mine_prepared(fe.miner_for(spec), prepared, spec, prep_shared=True)
             res.service_stats["prep_source"] = source
+            self._observe_result(res)
             return res
         t0 = time.perf_counter()
         miner, prepared = fe.prepare(rows, n_items, min_count, spec,
                                      need_waves=need_waves)
+        self.telemetry.histogram("engine.prep_s").record(time.perf_counter() - t0)
         self._cache_insert(key, miner, prepared)
         res = fe.mine_prepared(
             miner, prepared, spec, prep_stages=prepared.stage_times, t0=t0
         )
         res.service_stats["prep_source"] = "built"
+        self._observe_result(res)
         return res
 
     # ------------------------------------------------------------ streaming
@@ -602,20 +638,29 @@ class MiningEngine:
         floor = min(r.spec.resolve(n_rows) for r in reqs)
         need_waves = any(r.spec.max_k is None or r.spec.max_k > 1 for r in reqs)
         if self.prep_cache_bytes > 0:
+            t_lk = time.perf_counter()
             ent = self._cache_lookup(key, floor, need_waves)
             if ent is not None:
+                self.telemetry.histogram("engine.cache_hit_s").record(
+                    time.perf_counter() - t_lk
+                )
                 return (*ent, "cache", None)
             ent = self._snapshot_load(key, floor, need_waves, reqs[0].spec)
             if ent is not None:
+                self.telemetry.histogram("engine.snapshot_hit_s").record(
+                    time.perf_counter() - t_lk
+                )
                 return (*ent, "snapshot", None)
         t0 = time.perf_counter()
         miner, prepared = fe.prepare(
             rows, reqs[0].n_items, floor, reqs[0].spec, need_waves=need_waves
         )
+        prep_s = time.perf_counter() - t0
+        self.telemetry.histogram("engine.prep_s").record(prep_s)
         with self._lock:
             self.stats["prepares"] += 1
         self._cache_insert(key, miner, prepared)
-        return miner, prepared, "built", time.perf_counter() - t0
+        return miner, prepared, "built", prep_s
 
     def _group_serve(self, reqs: list[MineRequest], acq) -> list[MineResult]:
         """The k>2 waves per request of one planned group, over an acquired
@@ -642,6 +687,7 @@ class MiningEngine:
                 t0=time.perf_counter() - prep_s if payer else None,
             )
             res.service_stats["prep_source"] = source
+            self._observe_result(res)
             out.append(res)
         return out
 

@@ -38,6 +38,7 @@ from __future__ import annotations
 import collections
 import queue as _queue
 import threading
+import time
 
 
 class ServiceError(RuntimeError):
@@ -82,7 +83,7 @@ class AdmissionQueue:
     """
 
     def __init__(self, *, max_depth: int | None = None,
-                 max_bytes: int | None = None):
+                 max_bytes: int | None = None, registry=None):
         if max_depth is not None and max_depth < 1:
             raise ValueError(f"max_depth must be >= 1, got {max_depth}")
         if max_bytes is not None and max_bytes < 1:
@@ -93,6 +94,22 @@ class AdmissionQueue:
         self._cv = threading.Condition()
         self._bytes_in_flight = 0
         self.counters = {"admitted": 0, "rejected": 0, "shed": 0}
+        # telemetry: the service passes its engine's shared registry; a
+        # standalone queue (unit tests) gets a private one. Instrument
+        # locks are leaves — safe to touch while holding ``_cv``.
+        if registry is None:
+            from repro.mining.telemetry import Registry
+
+            registry = Registry()
+        self.telemetry = registry
+        self._depth_gauge = registry.gauge("admission.queue_depth")
+        self._bytes_gauge = registry.gauge("admission.bytes_in_flight")
+        self._wait_hist = registry.histogram("admission.queue_wait_s")
+
+    def _update_gauges(self) -> None:
+        # caller holds ``_cv``
+        self._depth_gauge.set(sum(1 for it in self._items if it is not None))
+        self._bytes_gauge.set(self._bytes_in_flight)
 
     # ------------------------------------------------------------- producer
     def offer(self, item) -> tuple[bool, list]:
@@ -118,6 +135,7 @@ class AdmissionQueue:
             self._items.append(item)
             self._bytes_in_flight += int(item.nbytes)
             self.counters["admitted"] += 1
+            self._update_gauges()
             self._cv.notify()
         return True, shed
 
@@ -160,12 +178,19 @@ class AdmissionQueue:
         with self._cv:
             if not self._cv.wait_for(lambda: len(self._items) > 0, timeout):
                 raise _queue.Empty
-            return self._items.popleft()
+            item = self._items.popleft()
+            self._update_gauges()
+        if item is not None:
+            submitted_at = getattr(item, "submitted_at", None)
+            if submitted_at is not None:
+                self._wait_hist.record(time.monotonic() - submitted_at)
+        return item
 
     def release(self, nbytes: int) -> None:
         """Return ``nbytes`` to the in-flight budget (request resolved)."""
         with self._cv:
             self._bytes_in_flight = max(0, self._bytes_in_flight - int(nbytes))
+            self._update_gauges()
             self._cv.notify_all()
 
     def drain_queued(self) -> list:
@@ -175,6 +200,7 @@ class AdmissionQueue:
         with self._cv:
             out = [it for it in self._items if it is not None]
             self._items.clear()
+            self._update_gauges()
             return out
 
     # ------------------------------------------------------------ telemetry

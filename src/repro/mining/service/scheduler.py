@@ -41,6 +41,7 @@ from concurrent.futures import ThreadPoolExecutor
 
 from repro.mining.engine import MineRequest, MiningEngine
 from repro.mining.service.admission import DeadlineExceeded
+from repro.mining.telemetry import trace
 
 
 class GroupScheduler:
@@ -52,6 +53,7 @@ class GroupScheduler:
 
     def __init__(self, engine: MiningEngine, *, host_workers: int = 4, overlap: bool = True):
         self.engine = engine
+        self.telemetry = engine.telemetry  # shared latency registry
         self.overlap = overlap
         self._host_pool = ThreadPoolExecutor(
             max_workers=max(1, host_workers), thread_name_prefix="mine-host"
@@ -95,19 +97,23 @@ class GroupScheduler:
         host_futures: list[tuple[int, object]] = []
         self.stats["batches"] += 1
 
-        for i, r in enumerate(requests):
-            if self._expired(r):  # dead on arrival: no classification work
-                results[i] = self._drop(r)
-                continue
-            key = self.engine._plan_key(r)
-            if key is None:
-                self.stats["host_requests"] += 1
-                host_futures.append((i, self._submit_host(r)))
-            elif key in by_key:
-                groups[by_key[key]][1].append(i)
-            else:
-                by_key[key] = len(groups)
-                groups.append((key, [i]))
+        trace_root = next(
+            (r.trace_id for r in requests if r.trace_id is not None), None
+        )
+        with trace.span("group.classify", parent=trace_root, n=len(requests)):
+            for i, r in enumerate(requests):
+                if self._expired(r):  # dead on arrival: no classification work
+                    results[i] = self._drop(r)
+                    continue
+                key = self.engine._plan_key(r)
+                if key is None:
+                    self.stats["host_requests"] += 1
+                    host_futures.append((i, self._submit_host(r)))
+                elif key in by_key:
+                    groups[by_key[key]][1].append(i)
+                else:
+                    by_key[key] = len(groups)
+                    groups.append((key, [i]))
         self.stats["device_groups"] += len(groups)
 
         # highest-priority group first (max over members; stable, so equal
@@ -136,9 +142,20 @@ class GroupScheduler:
             acq_fut, ahead = ahead, None
             if self.overlap and gi + 1 < len(groups):
                 ahead = self._submit_prep(group_reqs[gi + 1], groups[gi + 1][0])
+            group_root = next(
+                (r.trace_id for r in reqs if r.trace_id is not None), None
+            )
+            t_acq = time.perf_counter()
             try:
-                acq = acq_fut.result() if acq_fut is not None \
-                    else self.engine._group_acquire(reqs, key)
+                with trace.span("group.prep", parent=group_root,
+                                overlapped=acq_fut is not None and gi > 0):
+                    acq = acq_fut.result() if acq_fut is not None \
+                        else self.engine._group_acquire(reqs, key)
+                # wait observed by the serving thread: ~0 when the prep
+                # pipelined ahead (the actual build cost is engine.prep_s)
+                self.telemetry.histogram("scheduler.prep_wait_s").record(
+                    time.perf_counter() - t_acq
+                )
             except ValueError:
                 # group-floor guard trip: degrade to per-request one-shots,
                 # so a real per-request error surfaces on its own request
@@ -166,12 +183,18 @@ class GroupScheduler:
             if overlapped:
                 self.stats["overlapped_prepares"] += 1
             live_reqs = [r for _, r in live]
+            t_serve = time.perf_counter()
             try:
-                group_out = self.engine._group_serve(live_reqs, acq)
+                with trace.span("group.serve", parent=group_root,
+                                n=len(live_reqs), source=acq[2]):
+                    group_out = self.engine._group_serve(live_reqs, acq)
                 for res in group_out:
                     res.service_stats["prep_overlapped"] = overlapped
             except Exception as e:  # serve failure: pin it to every member
                 group_out = [e] * len(live_reqs)
+            self.telemetry.histogram("scheduler.serve_s").record(
+                time.perf_counter() - t_serve
+            )
             for (i, _), res in zip(live, group_out):
                 results[i] = res
 
@@ -226,7 +249,14 @@ class GroupScheduler:
         request costs its own slot, never the batch)."""
         if self._expired(r):  # checked at execution, not submission: a host
             return self._drop(r)  # request can expire waiting for a pool slot
+        t0 = time.perf_counter()
         try:
-            return self.engine.submit(r.rows, r.n_items, r.spec)
+            with trace.span("host.mine", parent=r.trace_id,
+                            algorithm=r.spec.algorithm):
+                return self.engine.submit(r.rows, r.n_items, r.spec)
         except Exception as e:
             return e
+        finally:
+            self.telemetry.histogram("scheduler.host_s").record(
+                time.perf_counter() - t0
+            )

@@ -63,6 +63,7 @@ from repro.mining.service.admission import (
 )
 from repro.mining.service.scheduler import GroupScheduler
 from repro.mining.spec import MineSpec
+from repro.mining.telemetry import trace
 
 
 @dataclasses.dataclass(eq=False)  # identity ==: AdmissionQueue removes by it,
@@ -76,6 +77,7 @@ class _Pending:                   # and field-wise eq chokes on array payloads
     priority: int = 0
     nbytes: int = 0  # admission byte accounting (rows payload)
     released: bool = False  # accounting done exactly once (see _finish)
+    trace_id: int | None = None  # root span id when a tracer is attached
 
 
 class _ServiceStats(dict):
@@ -122,7 +124,10 @@ class MiningService:
             worker_restarts=0,  # batches whose serve crashed (loop survived)
             stream_deadline_dropped=0,  # stream ops expired before running
         )
-        self._q = AdmissionQueue(max_depth=max_queue_depth, max_bytes=max_queue_bytes)
+        self._q = AdmissionQueue(
+            max_depth=max_queue_depth, max_bytes=max_queue_bytes,
+            registry=self.engine.telemetry,
+        )
         self._cv = threading.Condition()
         self._outstanding = 0
         self._closed = False
@@ -184,8 +189,19 @@ class MiningService:
                 if admitted:
                     self._outstanding += 1
                     self.stats["requests"] += 1
+        rec = trace.active()
+        if admitted and rec is not None:
+            # the request's root span: opened at submit time, closed when
+            # its Future resolves in _serve (or on a crashed batch)
+            p.trace_id = rec.open(
+                "request", t0=p.submitted_at, kind=p.kind, priority=p.priority
+            )
+            if p.req is not None:
+                p.req.trace_id = p.trace_id
         # resolve losers outside the lock (their callbacks run inline)
         for s in shed:
+            if rec is not None and s.trace_id is not None:
+                rec.close(s.trace_id, error="shed")
             self._resolve_exc(s.future, Overloaded(
                 "request shed from the admission queue by later-deadline work",
                 shed=True, depth=self._q.depth,
@@ -286,12 +302,20 @@ class MiningService:
 
         ``counters`` is the flat headline set (admitted / rejected / shed /
         deadline_dropped / retries / respawns); the nested sections carry
-        each layer's full dict for drill-down."""
+        each layer's full dict for drill-down. ``histograms`` is the shared
+        telemetry registry's latency-distribution view (name -> count /
+        sum / min / max / p50 / p95 / p99 / sparse buckets) — see
+        ``repro.mining.telemetry``; ``telemetry`` carries its counters,
+        gauges, and schema version."""
         service = {k: v for k, v in self.stats.items()}
         adm = self._q.info()
         sched = dict(self.scheduler.stats)
         streams = self.engine.stream_stats()
+        tel = self.engine.telemetry.snapshot()
         return {
+            "histograms": tel["histograms"],
+            "telemetry": {"schema": tel["schema"], "counters": tel["counters"],
+                          "gauges": tel["gauges"]},
             "counters": {
                 "admitted": adm["admitted"],
                 "rejected": adm["rejected"],
@@ -391,9 +415,12 @@ class MiningService:
         """Resolve every unresolved Future in a crashed batch with the
         crash. Futures ``_serve`` already resolved (or dropped as
         cancelled) are left alone — ``_finish`` is idempotent."""
+        rec = trace.active()
         for p in batch:
             if not p.future.done():
                 self._resolve_exc(p.future, exc)
+            if rec is not None and p.trace_id is not None:
+                rec.close(p.trace_id, error=repr(exc))
             self._finish(p)
 
     def _worker_exited(self) -> None:
@@ -425,6 +452,12 @@ class MiningService:
             return
         self.stats["batches"] += 1
         self.stats["max_batch"] = max(self.stats["max_batch"], len(batch))
+        rec = trace.active()
+        if rec is not None:
+            for p in batch:
+                if p.trace_id is not None:
+                    rec.add("admission.wait", p.submitted_at, t_start,
+                            parent=p.trace_id)
         # execute in arrival order: contiguous runs of mining requests go
         # through the scheduler as one planned sub-batch, stream operations
         # (appends / stream queries) run inline between them — a query that
@@ -457,11 +490,14 @@ class MiningService:
                 )
                 continue
             try:
-                results[i] = p.run()
+                with trace.span("stream.op", parent=p.trace_id):
+                    results[i] = p.run()
             except BaseException as e:
                 results[i] = e
         flush_chunk()
+        req_hist = self.engine.telemetry.histogram("service.request_s")
         for p, res in zip(batch, results):
+            t_res = time.monotonic()
             if isinstance(res, BaseException):
                 p.future.set_exception(res)
             else:
@@ -470,4 +506,10 @@ class MiningService:
                         queue_time_s=t_start - p.submitted_at, batch_size=len(batch)
                     )
                 p.future.set_result(res)
+            now = time.monotonic()
+            req_hist.record(now - p.submitted_at)
+            if rec is not None and p.trace_id is not None:
+                rec.add("resolve", t_res, now, parent=p.trace_id,
+                        ok=not isinstance(res, BaseException))
+                rec.close(p.trace_id, t1=now)
             self._finish(p)

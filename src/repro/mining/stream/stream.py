@@ -42,6 +42,7 @@ from repro.mining.result import MineResult
 from repro.mining.spec import MineSpec
 from repro.mining.stream.segmented import Segment, SegmentedDB
 from repro.mining.stream.spec import StreamSpec
+from repro.mining.telemetry import trace
 
 # content identity of a row block — the engine's fingerprint digest, so
 # stream snapshot keys and engine fingerprints can never drift apart
@@ -196,7 +197,7 @@ class StreamingMiner:
                 f"batch contains item id {int(rows.max())} >= n_items={self.n_items}"
             )
         t0 = time.perf_counter()
-        with self._lock:
+        with trace.span("stream.append", stream=self.name), self._lock:
             self._reap_compaction()
             hist = enc.item_support(rows, self.n_items)
             new_items = self.db.register_batch(hist)
@@ -218,6 +219,9 @@ class StreamingMiner:
             self._maybe_compact()
             diffs = self.standing.refresh_all(
                 "expire" if n_rows_expired else "append")
+            append_s = time.perf_counter() - t0
+            self.engine.telemetry.histogram(
+                f"stream.{self.name}.append_s").record(append_s)
             return {
                 "rows": int(len(rows)),
                 "total_rows": int(self.db.n_rows),
@@ -227,7 +231,7 @@ class StreamingMiner:
                 "expired_rows": n_rows_expired,
                 "diffs": int(diffs),
                 "prep_source": source,
-                "append_s": time.perf_counter() - t0,
+                "append_s": append_s,
             }
 
     def _expire(self) -> tuple[int, int]:
@@ -266,6 +270,7 @@ class StreamingMiner:
         except Exception:
             self.stats["expire_errors"] += 1
             return 0, 0
+        t_ex = time.perf_counter()
         seg_victims = {e[2].seg_id for e in victims if e[2] is not None}
         dropped = self.db.drop_segments(seg_victims) if seg_victims else []
         empty_ticks = {e[0] for e in victims if e[2] is None}
@@ -278,6 +283,9 @@ class StreamingMiner:
         self.stats["expires"] += 1
         self.stats["expired_segments"] += len(dropped)
         self.stats["expired_rows"] += n_rows
+        self.engine.telemetry.histogram(f"stream.{self.name}.expire_s").record(
+            time.perf_counter() - t_ex
+        )
         return len(dropped), n_rows
 
     # ----------------------------------------------------- standing queries
@@ -378,13 +386,17 @@ class StreamingMiner:
                 f"|stream F-list|={len(items)} exceeds max_f1={spec.max_f1}"
             )
         qminer = self._fe.miner_for(spec)  # honors execution-only knobs
-        res = qminer.mine_prepared_segments(
-            handles, items, sups, C, min_count, max_k=spec.max_k,
-            peak_base=peak_base, weights=weights,
-            seed=_seed if decay == 1.0 else None,
-            seed_out=_seed_out if decay == 1.0 else None,
-        )
+        with trace.span("stream.query", stream=self.name, segments=n_segs):
+            res = qminer.mine_prepared_segments(
+                handles, items, sups, C, min_count, max_k=spec.max_k,
+                peak_base=peak_base, weights=weights,
+                seed=_seed if decay == 1.0 else None,
+                seed_out=_seed_out if decay == 1.0 else None,
+            )
         self.stats["queries"] += 1
+        self.engine.telemetry.histogram(f"stream.{self.name}.query_s").record(
+            time.perf_counter() - t0
+        )
         out = self._fe._finish(
             res.itemsets, res.total_count, res.n_explicit, res.peak_bytes,
             dict(qminer.last_stage_times), res.flist_items,

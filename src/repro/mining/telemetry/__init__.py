@@ -1,0 +1,44 @@
+"""repro.mining.telemetry — latency histograms, request trace spans, and
+a periodic stats emitter for the serving stack.
+
+Three orthogonal pieces (see each module's docstring):
+
+  - :mod:`.hist` — ``LatencyHistogram`` (fixed log buckets, mergeable,
+    thread-safe, exact counts, p50/p95/p99 from bucket edges) plus the
+    ``Registry`` of named histograms/counters/gauges every serving layer
+    shares (one per ``MiningEngine``, at ``engine.telemetry``);
+  - :mod:`.trace` — per-request span trees behind a ``failures``-style
+    global attach/detach, exported as JSON or Chrome trace events;
+  - :mod:`.emit` — ``StatsEmitter``, a background JSON-lines snapshot
+    loop with chaos-point drop containment (``telemetry.emit``).
+
+Instrumentation is execution-orthogonal: registry and tracer state never
+feed prep/device/snapshot keys, and with no tracer attached the span
+sites cost one global read.
+"""
+from .emit import StatsEmitter
+from .hist import (
+    DEFAULT_EDGES,
+    SCHEMA_VERSION,
+    Counter,
+    Gauge,
+    LatencyHistogram,
+    Registry,
+)
+from .trace import TraceRecorder, active, attach, attached, current_span, span
+
+__all__ = [
+    "DEFAULT_EDGES",
+    "SCHEMA_VERSION",
+    "Counter",
+    "Gauge",
+    "LatencyHistogram",
+    "Registry",
+    "StatsEmitter",
+    "TraceRecorder",
+    "active",
+    "attach",
+    "attached",
+    "current_span",
+    "span",
+]

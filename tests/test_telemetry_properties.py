@@ -1,0 +1,85 @@
+"""Property tests for the telemetry histogram's load-bearing contracts.
+
+``LatencyHistogram`` feeds the operator stats surface and the periodic
+emitter, so its three promises are pinned down over random inputs:
+
+  - exact counts: every ``record`` lands in exactly one bucket, so the
+    bucket counts always sum to ``n`` and min/max/total are exact;
+  - ``merge`` is associative and commutative bucket-for-bucket — the
+    property that makes per-worker / per-thread histograms aggregable
+    in any order without resampling;
+  - a quantile estimate is bounded by the edges of the bucket containing
+    the true quantile (k-th smallest, k = ceil(q*n)), and by the observed
+    min/max — the estimate can be coarse, but never escapes the interval
+    the true value is known to lie in.
+"""
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.mining.telemetry import LatencyHistogram
+
+# latencies from sub-bucket-zero up to beyond the last edge (overflow),
+# negatives included to cover the clamp-to-zero path
+values = st.lists(
+    st.floats(min_value=-1.0, max_value=1e4,
+              allow_nan=False, allow_infinity=False),
+    min_size=1, max_size=60,
+)
+
+
+def _fill(vals):
+    h = LatencyHistogram()
+    for v in vals:
+        h.record(v)
+    return h
+
+
+@given(values)
+@settings(max_examples=200, deadline=None)
+def test_counts_are_exact(vals):
+    h = _fill(vals)
+    clamped = [max(0.0, v) for v in vals]
+    assert h.n == len(vals)
+    assert sum(h.counts) == len(vals)
+    assert h.vmin == min(clamped) and h.vmax == max(clamped)
+    assert h.total == pytest.approx(sum(clamped))
+
+
+@given(values, values)
+@settings(max_examples=200, deadline=None)
+def test_merge_commutative(a, b):
+    ab = _fill(a).merge(_fill(b))
+    ba = _fill(b).merge(_fill(a))
+    assert ab.counts == ba.counts and ab.n == ba.n
+    assert ab.vmin == ba.vmin and ab.vmax == ba.vmax
+    assert ab.total == pytest.approx(ba.total)
+
+
+@given(values, values, values)
+@settings(max_examples=100, deadline=None)
+def test_merge_associative_and_lossless(a, b, c):
+    left = _fill(a).merge(_fill(b)).merge(_fill(c))
+    right = _fill(a).merge(_fill(b).merge(_fill(c)))
+    whole = _fill(a + b + c)
+    for m in (left, right):
+        assert m.counts == whole.counts and m.n == whole.n
+        assert m.vmin == whole.vmin and m.vmax == whole.vmax
+        assert m.total == pytest.approx(whole.total)
+
+
+@given(values, st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=200, deadline=None)
+def test_quantile_bounded_by_bucket_edges(vals, q):
+    h = _fill(vals)
+    clamped = sorted(max(0.0, v) for v in vals)
+    k = min(len(clamped), max(1, math.ceil(q * len(clamped))))
+    true = clamped[k - 1]
+    lo, hi = h.quantile_bounds(q)
+    est = h.quantile(q)
+    assert lo <= true <= hi
+    assert lo <= est <= hi
+    assert h.vmin <= est <= h.vmax
